@@ -1,0 +1,74 @@
+"""Roofline table from the dry-run sweep artifacts (EXPERIMENTS.md
+§Roofline source). Reads artifacts/dryrun/results.json."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun",
+                   "results.json")
+
+
+def load() -> Dict:
+    if not os.path.exists(ART):
+        return {}
+    with open(ART) as f:
+        return json.load(f)
+
+
+def rows(mesh: str = "single") -> List[Dict]:
+    out = []
+    for key, r in sorted(load().items()):
+        if r.get("mesh") != mesh:
+            continue
+        row = {"arch": r["arch"], "shape": r["shape"],
+               "status": r["status"]}
+        if r["status"] == "ok":
+            rt = r["roofline"]
+            row.update({
+                "strategy": r.get("strategy"),
+                "compute_s": rt["compute_s"],
+                "memory_s": rt["memory_s"],
+                "collective_s": rt["collective_s"],
+                "dominant": rt["dominant"],
+                "model_flops": rt["model_flops"],
+                "useful_ratio": rt["useful_flops_ratio"],
+                "compile_s": r.get("compile_s"),
+            })
+        elif r["status"] == "skipped":
+            row["reason"] = r.get("reason", "")[:60]
+        else:
+            row["error"] = r.get("error", "")[:60]
+        out.append(row)
+    return out
+
+
+def main(csv: bool = True):
+    for mesh in ("single", "multi"):
+        got = rows(mesh)
+        if not got:
+            continue
+        print(f"# dryrun roofline table — {mesh}-pod mesh")
+        for r in got:
+            if r["status"] == "ok":
+                frac = (min(1.0, r["compute_s"] /
+                            max(r["compute_s"], r["memory_s"],
+                                r["collective_s"]))
+                        if r["compute_s"] else 0.0)
+                print(f"dryrun.{r['arch']}.{r['shape']}.{mesh},"
+                      f"{r['strategy']},"
+                      f"compute={r['compute_s']:.4g}s,"
+                      f"memory={r['memory_s']:.4g}s,"
+                      f"collective={r['collective_s']:.4g}s,"
+                      f"dominant={r['dominant']},"
+                      f"roofline_frac={frac:.3f}")
+            else:
+                print(f"dryrun.{r['arch']}.{r['shape']}.{mesh},"
+                      f"{r['status']},"
+                      f"{r.get('reason', r.get('error', ''))}")
+
+
+if __name__ == "__main__":
+    main()

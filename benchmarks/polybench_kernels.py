@@ -1,0 +1,696 @@
+"""PolyBench-Python corpus: the paper's 15 single-node kernels (Table 4 /
+Fig. 8), each in two styles exactly as the paper evaluates them:
+
+  * ``<name>_list``  — explicit Python loops over list-of-lists (the
+    paper's "List Default" version);
+  * ``<name>_np``    — NumPy-operator style (the paper's "NumPy" version,
+    and the baseline for Fig. 8).
+
+Both styles go through the AutoMPHC compiler unchanged; the SCoP
+unification means they raise to the same optimized code. Each entry also
+carries ``ref`` — a trusted plain-numpy executor used as the ground-truth
+oracle by the tests — plus problem-size presets and FLOP estimates.
+
+All kernels mutate their output arguments in place (PolyBench convention).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# gemm: C = alpha*A@B + beta*C
+# ---------------------------------------------------------------------------
+
+def gemm_list(alpha: float, beta: float, C: "list[f64,2]",
+              A: "list[f64,2]", B: "list[f64,2]",
+              NI: int, NJ: int, NK: int):
+    for i in range(0, NI):
+        for j in range(0, NJ):
+            C[i][j] *= beta
+        for k in range(0, NK):
+            for j in range(0, NJ):
+                C[i][j] += alpha * A[i][k] * B[k][j]
+
+
+def gemm_np(alpha: float, beta: float, C: "ndarray[f64,2]",
+            A: "ndarray[f64,2]", B: "ndarray[f64,2]",
+            NI: int, NJ: int, NK: int):
+    C[0:NI, 0:NJ] = beta * C[0:NI, 0:NJ] + alpha * np.dot(
+        A[0:NI, 0:NK], B[0:NK, 0:NJ])
+
+
+def gemm_ref(alpha, beta, C, A, B, NI, NJ, NK):
+    C *= beta
+    C += alpha * (A @ B)
+
+
+# ---------------------------------------------------------------------------
+# 2mm: D = alpha*A@B@C + beta*D
+# ---------------------------------------------------------------------------
+
+def k2mm_list(alpha: float, beta: float, tmp: "list[f64,2]",
+              A: "list[f64,2]", B: "list[f64,2]", C: "list[f64,2]",
+              D: "list[f64,2]", NI: int, NJ: int, NK: int, NL: int):
+    for i in range(0, NI):
+        for j in range(0, NJ):
+            tmp[i][j] = 0.0
+            for k in range(0, NK):
+                tmp[i][j] += alpha * A[i][k] * B[k][j]
+    for i in range(0, NI):
+        for j in range(0, NL):
+            D[i][j] *= beta
+            for k in range(0, NJ):
+                D[i][j] += tmp[i][k] * C[k][j]
+
+
+def k2mm_np(alpha: float, beta: float, tmp: "ndarray[f64,2]",
+            A: "ndarray[f64,2]", B: "ndarray[f64,2]", C: "ndarray[f64,2]",
+            D: "ndarray[f64,2]", NI: int, NJ: int, NK: int, NL: int):
+    tmp[0:NI, 0:NJ] = alpha * np.dot(A[0:NI, 0:NK], B[0:NK, 0:NJ])
+    D[0:NI, 0:NL] = beta * D[0:NI, 0:NL] + np.dot(tmp[0:NI, 0:NJ],
+                                                  C[0:NJ, 0:NL])
+
+
+def k2mm_ref(alpha, beta, tmp, A, B, C, D, NI, NJ, NK, NL):
+    tmp[:] = alpha * (A @ B)
+    D *= beta
+    D += tmp @ C
+
+
+# ---------------------------------------------------------------------------
+# 3mm: G = (A@B)@(C@D)
+# ---------------------------------------------------------------------------
+
+def k3mm_list(E: "list[f64,2]", A: "list[f64,2]", B: "list[f64,2]",
+              F: "list[f64,2]", C: "list[f64,2]", D: "list[f64,2]",
+              G: "list[f64,2]", NI: int, NJ: int, NK: int, NL: int,
+              NM: int):
+    for i in range(0, NI):
+        for j in range(0, NJ):
+            E[i][j] = 0.0
+            for k in range(0, NK):
+                E[i][j] += A[i][k] * B[k][j]
+    for i in range(0, NJ):
+        for j in range(0, NL):
+            F[i][j] = 0.0
+            for k in range(0, NM):
+                F[i][j] += C[i][k] * D[k][j]
+    for i in range(0, NI):
+        for j in range(0, NL):
+            G[i][j] = 0.0
+            for k in range(0, NJ):
+                G[i][j] += E[i][k] * F[k][j]
+
+
+def k3mm_np(E: "ndarray[f64,2]", A: "ndarray[f64,2]", B: "ndarray[f64,2]",
+            F: "ndarray[f64,2]", C: "ndarray[f64,2]", D: "ndarray[f64,2]",
+            G: "ndarray[f64,2]", NI: int, NJ: int, NK: int, NL: int,
+            NM: int):
+    E[0:NI, 0:NJ] = np.dot(A[0:NI, 0:NK], B[0:NK, 0:NJ])
+    F[0:NJ, 0:NL] = np.dot(C[0:NJ, 0:NM], D[0:NM, 0:NL])
+    G[0:NI, 0:NL] = np.dot(E[0:NI, 0:NJ], F[0:NJ, 0:NL])
+
+
+def k3mm_ref(E, A, B, F, C, D, G, NI, NJ, NK, NL, NM):
+    E[:] = A @ B
+    F[:] = C @ D
+    G[:] = E @ F
+
+
+# ---------------------------------------------------------------------------
+# atax: y = A.T @ (A @ x)
+# ---------------------------------------------------------------------------
+
+def atax_list(A: "list[f64,2]", x: "list[f64,1]", y: "list[f64,1]",
+              tmp: "list[f64,1]", M: int, N: int):
+    for i in range(0, N):
+        y[i] = 0.0
+    for i in range(0, M):
+        tmp[i] = 0.0
+        for j in range(0, N):
+            tmp[i] += A[i][j] * x[j]
+        for j in range(0, N):
+            y[j] += A[i][j] * tmp[i]
+
+
+def atax_np(A: "ndarray[f64,2]", x: "ndarray[f64,1]", y: "ndarray[f64,1]",
+            tmp: "ndarray[f64,1]", M: int, N: int):
+    tmp[0:M] = np.dot(A[0:M, 0:N], x[0:N])
+    y[0:N] = np.dot(A[0:M, 0:N].T, tmp[0:M])
+
+
+def atax_ref(A, x, y, tmp, M, N):
+    tmp[:] = A @ x
+    y[:] = A.T @ tmp
+
+
+# ---------------------------------------------------------------------------
+# bicg: q = A @ p ; s = A.T @ r
+# ---------------------------------------------------------------------------
+
+def bicg_list(A: "list[f64,2]", s: "list[f64,1]", q: "list[f64,1]",
+              p: "list[f64,1]", r: "list[f64,1]", M: int, N: int):
+    for i in range(0, M):
+        s[i] = 0.0
+    for i in range(0, N):
+        q[i] = 0.0
+        for j in range(0, M):
+            s[j] += r[i] * A[i][j]
+            q[i] += A[i][j] * p[j]
+
+
+def bicg_np(A: "ndarray[f64,2]", s: "ndarray[f64,1]", q: "ndarray[f64,1]",
+            p: "ndarray[f64,1]", r: "ndarray[f64,1]", M: int, N: int):
+    s[0:M] = np.dot(A[0:N, 0:M].T, r[0:N])
+    q[0:N] = np.dot(A[0:N, 0:M], p[0:M])
+
+
+def bicg_ref(A, s, q, p, r, M, N):
+    s[:] = A.T @ r
+    q[:] = A @ p
+
+
+# ---------------------------------------------------------------------------
+# mvt: x1 += A @ y1 ; x2 += A.T @ y2
+# ---------------------------------------------------------------------------
+
+def mvt_list(x1: "list[f64,1]", x2: "list[f64,1]", y1: "list[f64,1]",
+             y2: "list[f64,1]", A: "list[f64,2]", N: int):
+    for i in range(0, N):
+        for j in range(0, N):
+            x1[i] += A[i][j] * y1[j]
+    for i in range(0, N):
+        for j in range(0, N):
+            x2[i] += A[j][i] * y2[j]
+
+
+def mvt_np(x1: "ndarray[f64,1]", x2: "ndarray[f64,1]",
+           y1: "ndarray[f64,1]", y2: "ndarray[f64,1]",
+           A: "ndarray[f64,2]", N: int):
+    x1[0:N] = x1[0:N] + np.dot(A[0:N, 0:N], y1[0:N])
+    x2[0:N] = x2[0:N] + np.dot(A[0:N, 0:N].T, y2[0:N])
+
+
+def mvt_ref(x1, x2, y1, y2, A, N):
+    x1 += A @ y1
+    x2 += A.T @ y2
+
+
+# ---------------------------------------------------------------------------
+# gesummv: y = alpha*A@x + beta*B@x
+# ---------------------------------------------------------------------------
+
+def gesummv_list(alpha: float, beta: float, A: "list[f64,2]",
+                 B: "list[f64,2]", tmp: "list[f64,1]", x: "list[f64,1]",
+                 y: "list[f64,1]", N: int):
+    for i in range(0, N):
+        tmp[i] = 0.0
+        y[i] = 0.0
+        for j in range(0, N):
+            tmp[i] += A[i][j] * x[j]
+            y[i] += B[i][j] * x[j]
+        y[i] = alpha * tmp[i] + beta * y[i]
+
+
+def gesummv_np(alpha: float, beta: float, A: "ndarray[f64,2]",
+               B: "ndarray[f64,2]", tmp: "ndarray[f64,1]",
+               x: "ndarray[f64,1]", y: "ndarray[f64,1]", N: int):
+    tmp[0:N] = np.dot(A[0:N, 0:N], x[0:N])
+    y[0:N] = np.dot(B[0:N, 0:N], x[0:N])
+    y[0:N] = alpha * tmp[0:N] + beta * y[0:N]
+
+
+def gesummv_ref(alpha, beta, A, B, tmp, x, y, N):
+    tmp[:] = A @ x
+    y[:] = alpha * tmp + beta * (B @ x)
+
+
+# ---------------------------------------------------------------------------
+# gemver: rank-2 update + two matvecs
+# ---------------------------------------------------------------------------
+
+def gemver_list(alpha: float, beta: float, A: "list[f64,2]",
+                u1: "list[f64,1]", v1: "list[f64,1]", u2: "list[f64,1]",
+                v2: "list[f64,1]", w: "list[f64,1]", x: "list[f64,1]",
+                y: "list[f64,1]", z: "list[f64,1]", N: int):
+    for i in range(0, N):
+        for j in range(0, N):
+            A[i][j] = A[i][j] + u1[i] * v1[j] + u2[i] * v2[j]
+    for i in range(0, N):
+        for j in range(0, N):
+            x[i] += beta * A[j][i] * y[j]
+    for i in range(0, N):
+        x[i] += z[i]
+    for i in range(0, N):
+        for j in range(0, N):
+            w[i] += alpha * A[i][j] * x[j]
+
+
+def gemver_np(alpha: float, beta: float, A: "ndarray[f64,2]",
+              u1: "ndarray[f64,1]", v1: "ndarray[f64,1]",
+              u2: "ndarray[f64,1]", v2: "ndarray[f64,1]",
+              w: "ndarray[f64,1]", x: "ndarray[f64,1]",
+              y: "ndarray[f64,1]", z: "ndarray[f64,1]", N: int):
+    A[0:N, 0:N] = A[0:N, 0:N] + np.outer(u1[0:N], v1[0:N]) \
+        + np.outer(u2[0:N], v2[0:N])
+    x[0:N] = x[0:N] + beta * np.dot(A[0:N, 0:N].T, y[0:N]) + z[0:N]
+    w[0:N] = w[0:N] + alpha * np.dot(A[0:N, 0:N], x[0:N])
+
+
+def gemver_ref(alpha, beta, A, u1, v1, u2, v2, w, x, y, z, N):
+    A += np.outer(u1, v1) + np.outer(u2, v2)
+    x += beta * (A.T @ y) + z
+    w += alpha * (A @ x)
+
+
+# ---------------------------------------------------------------------------
+# syrk: C = alpha*A@A.T + beta*C (lower triangle)
+# ---------------------------------------------------------------------------
+
+def syrk_list(alpha: float, beta: float, C: "list[f64,2]",
+              A: "list[f64,2]", N: int, M: int):
+    for i in range(0, N):
+        for j in range(0, i + 1):
+            C[i][j] *= beta
+        for k in range(0, M):
+            for j in range(0, i + 1):
+                C[i][j] += alpha * A[i][k] * A[j][k]
+
+
+def syrk_np(alpha: float, beta: float, C: "ndarray[f64,2]",
+            A: "ndarray[f64,2]", N: int, M: int):
+    for i in range(0, N):
+        C[i, 0:i + 1] = beta * C[i, 0:i + 1] \
+            + alpha * np.dot(A[0:i + 1, 0:M], A[i, 0:M])
+
+
+def syrk_ref(alpha, beta, C, A, N, M):
+    full = alpha * (A @ A.T)
+    tri = np.tril_indices(N)
+    C[tri] = beta * C[tri] + full[tri]
+
+
+# ---------------------------------------------------------------------------
+# syr2k: C = alpha*(A@B.T + B@A.T) + beta*C (lower triangle)
+# ---------------------------------------------------------------------------
+
+def syr2k_list(alpha: float, beta: float, C: "list[f64,2]",
+               A: "list[f64,2]", B: "list[f64,2]", N: int, M: int):
+    for i in range(0, N):
+        for j in range(0, i + 1):
+            C[i][j] *= beta
+        for k in range(0, M):
+            for j in range(0, i + 1):
+                C[i][j] += A[j][k] * alpha * B[i][k] \
+                    + B[j][k] * alpha * A[i][k]
+
+
+def syr2k_np(alpha: float, beta: float, C: "ndarray[f64,2]",
+             A: "ndarray[f64,2]", B: "ndarray[f64,2]", N: int, M: int):
+    for i in range(0, N):
+        C[i, 0:i + 1] = beta * C[i, 0:i + 1] \
+            + alpha * np.dot(A[0:i + 1, 0:M], B[i, 0:M]) \
+            + alpha * np.dot(B[0:i + 1, 0:M], A[i, 0:M])
+
+
+def syr2k_ref(alpha, beta, C, A, B, N, M):
+    full = alpha * (A @ B.T + B @ A.T)
+    tri = np.tril_indices(N)
+    C[tri] = beta * C[tri] + full[tri]
+
+
+# ---------------------------------------------------------------------------
+# trmm: B = alpha * A^T_lower @ B (in place)
+# ---------------------------------------------------------------------------
+
+def trmm_list(alpha: float, B: "list[f64,2]", A: "list[f64,2]",
+              M: int, N: int):
+    for i in range(0, M):
+        for j in range(0, N):
+            for k in range(i + 1, M):
+                B[i][j] += A[k][i] * B[k][j]
+            B[i][j] *= alpha
+
+
+def trmm_np(alpha: float, B: "ndarray[f64,2]", A: "ndarray[f64,2]",
+            M: int, N: int):
+    for i in range(0, M):
+        B[i, 0:N] = alpha * (B[i, 0:N]
+                             + np.dot(A[i + 1:M, i], B[i + 1:M, 0:N]))
+
+
+def trmm_ref(alpha, B, A, M, N):
+    for i in range(M):
+        B[i, :] += A[i + 1:, i] @ B[i + 1:, :]
+        B[i, :] *= alpha
+
+
+# ---------------------------------------------------------------------------
+# symm: C = alpha*A_sym@B + beta*C (A symmetric, lower stored)
+# ---------------------------------------------------------------------------
+
+def symm_list(alpha: float, beta: float, C: "list[f64,2]",
+              A: "list[f64,2]", B: "list[f64,2]", M: int, N: int):
+    for i in range(0, M):
+        for j in range(0, N):
+            temp2 = 0.0
+            for k in range(0, i):
+                C[k][j] += alpha * B[i][j] * A[i][k]
+                temp2 += B[k][j] * A[i][k]
+            C[i][j] = beta * C[i][j] + alpha * B[i][j] * A[i][i] \
+                + alpha * temp2
+
+
+def symm_np(alpha: float, beta: float, C: "ndarray[f64,2]",
+            A: "ndarray[f64,2]", B: "ndarray[f64,2]", M: int, N: int):
+    for i in range(0, M):
+        C[0:i, 0:N] = C[0:i, 0:N] + alpha * np.outer(A[i, 0:i], B[i, 0:N])
+        C[i, 0:N] = beta * C[i, 0:N] + alpha * B[i, 0:N] * A[i, i] \
+            + alpha * np.dot(A[i, 0:i], B[0:i, 0:N])
+
+
+def symm_ref(alpha, beta, C, A, B, M, N):
+    for i in range(M):
+        C[:i, :] += alpha * np.outer(A[i, :i], B[i, :])
+        C[i, :] = beta * C[i, :] + alpha * B[i, :] * A[i, i] \
+            + alpha * (A[i, :i] @ B[:i, :])
+
+
+# ---------------------------------------------------------------------------
+# doitgen: A[r,q,:] = A[r,q,:] @ C4
+# ---------------------------------------------------------------------------
+
+def doitgen_list(A: "list[f64,3]", C4: "list[f64,2]", w: "list[f64,1]",
+                 NR: int, NQ: int, NP: int):
+    for r in range(0, NR):
+        for q in range(0, NQ):
+            for p in range(0, NP):
+                w[p] = 0.0
+                for s in range(0, NP):
+                    w[p] += A[r][q][s] * C4[s][p]
+            for p in range(0, NP):
+                A[r][q][p] = w[p]
+
+
+def doitgen_np(A: "ndarray[f64,3]", C4: "ndarray[f64,2]",
+               w: "ndarray[f64,1]", NR: int, NQ: int, NP: int):
+    for r in range(0, NR):
+        for q in range(0, NQ):
+            w[0:NP] = np.dot(A[r, q, 0:NP], C4[0:NP, 0:NP])
+            A[r, q, 0:NP] = w[0:NP]
+
+
+def doitgen_ref(A, C4, w, NR, NQ, NP):
+    for r in range(NR):
+        for q in range(NQ):
+            A[r, q, :] = A[r, q, :] @ C4
+
+
+# ---------------------------------------------------------------------------
+# correlation
+# ---------------------------------------------------------------------------
+
+def correlation_list(float_n: float, data: "list[f64,2]",
+                     corr: "list[f64,2]", mean: "list[f64,1]",
+                     stddev: "list[f64,1]", M: int, N: int):
+    for j in range(0, M):
+        mean[j] = 0.0
+        for i in range(0, N):
+            mean[j] += data[i][j]
+        mean[j] = mean[j] / float_n
+    for j in range(0, M):
+        stddev[j] = 0.0
+        for i in range(0, N):
+            stddev[j] += (data[i][j] - mean[j]) * (data[i][j] - mean[j])
+        stddev[j] = np.sqrt(stddev[j] / float_n)
+        stddev[j] = np.maximum(stddev[j], 0.1)
+    for i in range(0, N):
+        for j in range(0, M):
+            data[i][j] = (data[i][j] - mean[j]) \
+                / (np.sqrt(float_n) * stddev[j])
+    for i in range(0, M):
+        corr[i][i] = 1.0
+    for i in range(0, M - 1):
+        for j in range(i + 1, M):
+            corr[i][j] = 0.0
+            for k in range(0, N):
+                corr[i][j] += data[k][i] * data[k][j]
+            corr[j][i] = corr[i][j]
+
+
+def correlation_np(float_n: float, data: "ndarray[f64,2]",
+                   corr: "ndarray[f64,2]", mean: "ndarray[f64,1]",
+                   stddev: "ndarray[f64,1]", M: int, N: int):
+    mean[0:M] = data[0:N, 0:M].sum(axis=0) / float_n
+    stddev[0:M] = np.sqrt(
+        ((data[0:N, 0:M] - mean[0:M])
+         * (data[0:N, 0:M] - mean[0:M])).sum(axis=0) / float_n)
+    stddev[0:M] = np.maximum(stddev[0:M], 0.1)
+    data[0:N, 0:M] = (data[0:N, 0:M] - mean[0:M]) \
+        / (np.sqrt(float_n) * stddev[0:M])
+    for i in range(0, M):
+        corr[i][i] = 1.0
+    for i in range(0, M - 1):
+        corr[i, i + 1:M] = (data[0:N, i] * data[0:N, i + 1:M].T).sum(axis=1)
+        corr[i + 1:M, i] = corr[i, i + 1:M]
+
+
+def correlation_ref(float_n, data, corr, mean, stddev, M, N):
+    mean[:] = data.sum(axis=0) / float_n
+    stddev[:] = np.sqrt(((data - mean) ** 2).sum(axis=0) / float_n)
+    stddev[:] = np.maximum(stddev, 0.1)
+    data -= mean
+    data /= np.sqrt(float_n) * stddev
+    corr[:] = data.T @ data
+    np.fill_diagonal(corr, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# covariance
+# ---------------------------------------------------------------------------
+
+def covariance_list(float_n: float, data: "list[f64,2]",
+                    cov: "list[f64,2]", mean: "list[f64,1]",
+                    M: int, N: int):
+    for j in range(0, M):
+        mean[j] = 0.0
+        for i in range(0, N):
+            mean[j] += data[i][j]
+        mean[j] = mean[j] / float_n
+    for i in range(0, N):
+        for j in range(0, M):
+            data[i][j] -= mean[j]
+    for i in range(0, M):
+        for j in range(i, M):
+            cov[i][j] = 0.0
+            for k in range(0, N):
+                cov[i][j] += data[k][i] * data[k][j]
+            cov[i][j] = cov[i][j] / (float_n - 1.0)
+            cov[j][i] = cov[i][j]
+
+
+def covariance_np(float_n: float, data: "ndarray[f64,2]",
+                  cov: "ndarray[f64,2]", mean: "ndarray[f64,1]",
+                  M: int, N: int):
+    mean[0:M] = data[0:N, 0:M].sum(axis=0) / float_n
+    data[0:N, 0:M] = data[0:N, 0:M] - mean[0:M]
+    for i in range(0, M):
+        cov[i, i:M] = (data[0:N, i] * data[0:N, i:M].T).sum(axis=1) \
+            / (float_n - 1.0)
+        cov[i:M, i] = cov[i, i:M]
+
+
+def covariance_ref(float_n, data, cov, mean, M, N):
+    mean[:] = data.sum(axis=0) / float_n
+    data -= mean
+    cov[:] = (data.T @ data) / (float_n - 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def _mk(shape, rng):
+    return rng.normal(size=shape)
+
+
+KERNELS = {}
+
+
+def register(name, list_fn, np_fn, ref_fn, make_args, flops):
+    KERNELS[name] = {
+        "list": list_fn, "np": np_fn, "ref": ref_fn,
+        "make_args": make_args, "flops": flops,
+    }
+
+
+def _gemm_args(n, rng):
+    NI = NJ = NK = n
+    return [1.5, 1.2, _mk((NI, NJ), rng), _mk((NI, NK), rng),
+            _mk((NK, NJ), rng), NI, NJ, NK], {"out": [2]}
+
+
+register("gemm", gemm_list, gemm_np, gemm_ref, _gemm_args,
+         lambda n: 2.0 * n ** 3)
+
+
+def _2mm_args(n, rng):
+    NI = NJ = NK = NL = n
+    return [1.5, 1.2, np.zeros((NI, NJ)), _mk((NI, NK), rng),
+            _mk((NK, NJ), rng), _mk((NJ, NL), rng), _mk((NI, NL), rng),
+            NI, NJ, NK, NL], {"out": [2, 6]}
+
+
+register("2mm", k2mm_list, k2mm_np, k2mm_ref, _2mm_args,
+         lambda n: 4.0 * n ** 3)
+
+
+def _3mm_args(n, rng):
+    NI = NJ = NK = NL = NM = n
+    return [np.zeros((NI, NJ)), _mk((NI, NK), rng), _mk((NK, NJ), rng),
+            np.zeros((NJ, NL)), _mk((NJ, NM), rng), _mk((NM, NL), rng),
+            np.zeros((NI, NL)), NI, NJ, NK, NL, NM], {"out": [0, 3, 6]}
+
+
+register("3mm", k3mm_list, k3mm_np, k3mm_ref, _3mm_args,
+         lambda n: 6.0 * n ** 3)
+
+
+def _atax_args(n, rng):
+    M = N = n
+    return [_mk((M, N), rng), _mk((N,), rng), np.zeros(N), np.zeros(M),
+            M, N], {"out": [2, 3]}
+
+
+register("atax", atax_list, atax_np, atax_ref, _atax_args,
+         lambda n: 4.0 * n ** 2)
+
+
+def _bicg_args(n, rng):
+    M = N = n
+    return [_mk((N, M), rng), np.zeros(M), np.zeros(N), _mk((M,), rng),
+            _mk((N,), rng), M, N], {"out": [1, 2]}
+
+
+register("bicg", bicg_list, bicg_np, bicg_ref, _bicg_args,
+         lambda n: 4.0 * n ** 2)
+
+
+def _mvt_args(n, rng):
+    N = n
+    return [_mk((N,), rng), _mk((N,), rng), _mk((N,), rng),
+            _mk((N,), rng), _mk((N, N), rng), N], {"out": [0, 1]}
+
+
+register("mvt", mvt_list, mvt_np, mvt_ref, _mvt_args,
+         lambda n: 4.0 * n ** 2)
+
+
+def _gesummv_args(n, rng):
+    N = n
+    return [1.5, 1.2, _mk((N, N), rng), _mk((N, N), rng), np.zeros(N),
+            _mk((N,), rng), np.zeros(N), N], {"out": [4, 6]}
+
+
+register("gesummv", gesummv_list, gesummv_np, gesummv_ref, _gesummv_args,
+         lambda n: 4.0 * n ** 2)
+
+
+def _gemver_args(n, rng):
+    N = n
+    return [1.5, 1.2, _mk((N, N), rng), _mk((N,), rng), _mk((N,), rng),
+            _mk((N,), rng), _mk((N,), rng), np.zeros(N), np.zeros(N),
+            _mk((N,), rng), _mk((N,), rng), N], {"out": [2, 7, 8]}
+
+
+register("gemver", gemver_list, gemver_np, gemver_ref, _gemver_args,
+         lambda n: 10.0 * n ** 2)
+
+
+def _syrk_args(n, rng):
+    N = M = n
+    return [1.5, 1.2, _mk((N, N), rng), _mk((N, M), rng), N, M], \
+        {"out": [2]}
+
+
+register("syrk", syrk_list, syrk_np, syrk_ref, _syrk_args,
+         lambda n: 1.0 * n ** 3)
+
+
+def _syr2k_args(n, rng):
+    N = M = n
+    return [1.5, 1.2, _mk((N, N), rng), _mk((N, M), rng),
+            _mk((N, M), rng), N, M], {"out": [2]}
+
+
+register("syr2k", syr2k_list, syr2k_np, syr2k_ref, _syr2k_args,
+         lambda n: 2.0 * n ** 3)
+
+
+def _trmm_args(n, rng):
+    M = N = n
+    return [1.5, _mk((M, N), rng), _mk((M, M), rng), M, N], {"out": [1]}
+
+
+register("trmm", trmm_list, trmm_np, trmm_ref, _trmm_args,
+         lambda n: 1.0 * n ** 3)
+
+
+def _symm_args(n, rng):
+    M = N = n
+    return [1.5, 1.2, _mk((M, N), rng), _mk((M, M), rng),
+            _mk((M, N), rng), M, N], {"out": [2]}
+
+
+register("symm", symm_list, symm_np, symm_ref, _symm_args,
+         lambda n: 2.0 * n ** 3)
+
+
+def _doitgen_args(n, rng):
+    NR, NQ, NP = max(2, n // 8), max(2, n // 8), n
+    return [_mk((NR, NQ, NP), rng), _mk((NP, NP), rng), np.zeros(NP),
+            NR, NQ, NP], {"out": [0]}
+
+
+register("doitgen", doitgen_list, doitgen_np, doitgen_ref, _doitgen_args,
+         lambda n: 2.0 * (n // 8) ** 2 * n ** 2)
+
+
+def _correlation_args(n, rng):
+    M = N = n
+    return [float(N), _mk((N, M), rng), np.zeros((M, M)), np.zeros(M),
+            np.zeros(M), M, N], {"out": [1, 2, 3, 4]}
+
+
+register("correlation", correlation_list, correlation_np, correlation_ref,
+         _correlation_args, lambda n: 2.0 * n ** 3)
+
+
+def _covariance_args(n, rng):
+    M = N = n
+    return [float(N), _mk((N, M), rng), np.zeros((M, M)), np.zeros(M),
+            M, N], {"out": [1, 2, 3]}
+
+
+register("covariance", covariance_list, covariance_np, covariance_ref,
+         _covariance_args, lambda n: 1.0 * n ** 3)
+
+
+def clone_args(args):
+    """Deep-copy argument list (arrays copied; scalars shared)."""
+    out = []
+    for a in args:
+        if isinstance(a, np.ndarray):
+            out.append(a.copy())
+        elif isinstance(a, list):
+            out.append([row.copy() if isinstance(row, list) else row
+                        for row in a])
+        else:
+            out.append(a)
+    return out
+
+
+def to_lists(args):
+    """Convert ndarray args to nested lists (the paper's List versions)."""
+    return [a.tolist() if isinstance(a, np.ndarray) else a for a in args]

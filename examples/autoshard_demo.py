@@ -1,0 +1,42 @@
+"""Auto-sharding planner demo: the paper's inter-node parallelization at
+LM scale. Prints the legality/profitability decision tree outcome for
+each assigned architecture on the production pod mesh (abstract — no
+device allocation).
+
+    PYTHONPATH=src:. python examples/autoshard_demo.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main():
+    import jax
+
+    from repro.configs import ARCHS, get_config
+    from repro.core import planner as PL
+    from repro.models import transformer as T
+
+    class PodMesh:  # abstract stand-in: planner math only
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+        size = 256
+
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        cands = []
+        for st in PL.make_strategies(PodMesh()):
+            est = PL.estimate_plan(cfg, st, PodMesh(), 4096, 256, "train")
+            cands.append(est)
+        best = min([e for e in cands if e.legal] or cands,
+                   key=lambda e: e.step_s)
+        print(f"{arch:24s} → {best.strategy:8s} mb={best.microbatch:<3d}"
+              f" hbm={best.hbm_bytes_per_chip / 2**30:6.2f}GiB "
+              f"step≈{best.step_s * 1e3:8.1f}ms  "
+              f"[{' '.join(f'{e.strategy}:{"ok" if e.legal else "OOM"}' for e in cands)}]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Batched serving example (deliverable b, serving flavor): continuous
+batching over a reduced model with staggered request arrivals.
+
+    PYTHONPATH=src:. python examples/serve_lm.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    stats = serve_mod.main(["--arch", "stablelm_3b", "--smoke",
+                            "--requests", "8", "--slots", "3",
+                            "--max-tokens", "10"])
+    assert stats["requests"] == 8
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Assigned-architecture configs (public-literature presets).
+
+Each module exposes ``config()`` → ArchConfig (the exact assigned
+dimensions) and ``smoke_config()`` → a reduced same-family config for CPU
+smoke tests. ``repro.configs.registry`` maps ``--arch <id>`` to them.
+"""
+
+from .registry import ARCHS, SHAPES, get_config, get_smoke_config, shape_spec
+
+__all__ = ["ARCHS", "SHAPES", "get_config", "get_smoke_config",
+           "shape_spec"]

@@ -1,0 +1,725 @@
+"""Code generation: scheduled SCoP → optimized Python source.
+
+Two backends, mirroring the paper's §4.3 variants:
+  * ``np``  — optimized CPU code (NumPy library mapping);
+  * ``jnp`` — accelerator code (JAX; the TPU analogue of the paper's
+    NumPy→CuPy conversion). Functional semantics: arrays are rebuilt with
+    ``.at[]`` updates and written arrays are returned; the dispatcher
+    copies results back into the caller's buffers.
+
+The jnp backend is all-or-nothing per kernel, exactly like the paper's CuPy
+conversion: any black-box statement, loop fallback, or pfor makes the
+accelerator variant infeasible (EmitError) and the decision tree keeps the
+optimized-NumPy and original variants.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from . import tir
+from .isl_lite import Affine, LoopDim
+from .raising import (EinsumSpec, Hull, MaskOperand, RaiseError, WritePlan,
+                      compute_hull, normalize, plan_einsum, plan_write)
+from .schedule import (FFTUnit, OpaqueUnit, PforUnit, RaisedUnit, Schedule,
+                       SeqLoopUnit, Unit)
+from .scop import (CanonStmt, VAccess, VBin, VConst, VExpr, VParam, VReduce,
+                   VUnary)
+
+
+class EmitError(Exception):
+    pass
+
+
+def _uses_red_var(e: VExpr, var: str) -> bool:
+    if isinstance(e, VAccess):
+        return any(var in idx.vars() for idx in e.idx)
+    if isinstance(e, VBin):
+        return _uses_red_var(e.left, var) or _uses_red_var(e.right, var)
+    if isinstance(e, VUnary):
+        return _uses_red_var(e.operand, var)
+    if isinstance(e, VReduce):
+        return _uses_red_var(e.child, var)
+    return False
+
+
+# ---------------------------------------------------------------------------
+# Affine → Python
+# ---------------------------------------------------------------------------
+
+def affine_py(a: Affine) -> str:
+    parts: List[str] = []
+    for k, c in a.coeffs:
+        if c == 1:
+            parts.append(k)
+        elif c == -1:
+            parts.append(f"-{k}")
+        else:
+            parts.append(f"{c}*{k}")
+    if a.const or not parts:
+        parts.append(str(a.const))
+    out = " + ".join(parts).replace("+ -", "- ")
+    return out if len(parts) == 1 else f"({out})"
+
+
+# ---------------------------------------------------------------------------
+# Emitter
+# ---------------------------------------------------------------------------
+
+@dataclass
+class EmitMeta:
+    jax_ok: bool = True
+    uses_pfor: bool = False
+    pfor_count: int = 0
+    raised_ops: List[str] = field(default_factory=list)
+
+
+class Emitter:
+    def __init__(self, sched: Schedule, backend: str):
+        assert backend in ("np", "jnp")
+        self.s = sched
+        self.backend = backend
+        self.lines: List[str] = []
+        self.depth = 1
+        self.bound: Set[str] = set()  # loop vars live as python scalars
+        self.meta = EmitMeta()
+        self.tmp_counter = itertools.count()
+        # shape symbols for locally-defined arrays, emitted lazily right
+        # after the defining statement: {array: [sym, …]}
+        self.pending_syms: Dict[str, List[str]] = {}
+
+    def define_syms_for(self, arr: str) -> None:
+        for sym in self.pending_syms.pop(arr, []):
+            d = sym.rsplit("__d", 1)[1]
+            self.w(f"{sym} = {arr}.shape[{d}]")
+
+    # -- low-level -------------------------------------------------------
+    def w(self, line: str) -> None:
+        self.lines.append("    " * self.depth + line)
+
+    def fresh(self, p: str = "v") -> str:
+        return f"__{p}{next(self.tmp_counter)}"
+
+    # -- frames ------------------------------------------------------------
+    def free_dims(self, stmt: CanonStmt) -> List[LoopDim]:
+        return [d for d in stmt.domain.dims if d.var not in self.bound]
+
+    # -- expression emission -------------------------------------------
+    def emit_expr(self, e: VExpr, frame: Tuple[str, ...],
+                  hull: Hull) -> str:
+        if isinstance(e, VConst):
+            return repr(e.value)
+        if isinstance(e, VParam):
+            return e.name
+        if isinstance(e, VUnary):
+            inner = self.emit_expr(e.operand, frame, hull)
+            if e.fn == "-":
+                return f"(-{inner})"
+            if e.fn.startswith("np."):
+                return f"xp.{e.fn[3:]}({inner})"
+            return f"{e.fn}({inner})"
+        if isinstance(e, VBin):
+            l = self.emit_expr(e.left, frame, hull)
+            r = self.emit_expr(e.right, frame, hull)
+            if e.op.startswith("np."):
+                return f"xp.{e.op[3:]}({l}, {r})"
+            return f"({l} {e.op} {r})"
+        if isinstance(e, VAccess):
+            return self.emit_access_aligned(e, frame, hull)
+        if isinstance(e, VReduce):
+            try:
+                spec = plan_einsum(e, frame, hull)
+                return self.emit_einsum(spec, frame, hull)
+            except RaiseError:
+                return self.emit_elementwise_sum(e, frame, hull)
+        raise EmitError(f"cannot emit {type(e).__name__}")
+
+    def emit_elementwise_sum(self, e: VReduce, frame: Tuple[str, ...],
+                             hull: Hull) -> str:
+        """Σ over rectangular reduce dims of an arbitrary elementwise
+        expression: emit the expression over frame+reduce dims, then
+        ``.sum(axis=…)`` (Table 2's sum_2D,axis=k raising)."""
+        # reduce bounds must not depend on out iterators (else einsum+mask
+        # was the only vectorized option and we fall back to loops)
+        for d in e.dims:
+            for b in (d.lower, d.upper):
+                if any(v in frame for v in b.vars()):
+                    raise RaiseError("triangular bound in elementwise sum")
+            if not _uses_red_var(e.child, d.var):
+                raise RaiseError("reduce var unused in child")
+        frame2 = tuple(frame) + tuple(d.var for d in e.dims)
+        hull2 = Hull(dict(hull.lo), dict(hull.hi), list(hull.conds))
+        for d in e.dims:
+            hull2.lo[d.var] = d.lower
+            hull2.hi[d.var] = d.upper
+        inner = self.emit_expr(e.child, frame2, hull2)
+        axes = tuple(range(len(frame), len(frame2)))
+        ax = axes[0] if len(axes) == 1 else axes
+        self.meta.raised_ops.append("sum")
+        return f"({inner}).sum(axis={ax})"
+
+    def access_slices_and_dims(
+        self, acc: VAccess, frame: Tuple[str, ...], hull: Hull,
+        extra_lo: Dict[str, Affine] = None, extra_hi: Dict[str, Affine] = None,
+    ) -> Tuple[str, List[str]]:
+        """Slice string for an access + ordered iterator vars of its dims."""
+        extra_lo = extra_lo or {}
+        extra_hi = extra_hi or {}
+        comps: List[str] = []
+        order: List[str] = []
+        for idx in acc.idx:
+            ivars = [v for v in idx.vars()
+                     if v in frame or v in extra_lo]
+            if not ivars:
+                comps.append(affine_py(idx))
+                continue
+            if len(ivars) > 1:
+                raise RaiseError("multi-iterator access index")
+            v = ivars[0]
+            if idx.coeff(v) != 1:
+                raise RaiseError("non-unit access stride")
+            rest = idx.drop([v])
+            lo = (extra_lo.get(v) or hull.lo[v]) + rest
+            hi = (extra_hi.get(v) or hull.hi[v]) + rest
+            comps.append(f"{affine_py(lo)}:{affine_py(hi)}")
+            order.append(v)
+        sl = f"{acc.array}[{', '.join(comps)}]" if comps else acc.array
+        return sl, order
+
+    def align(self, expr: str, order: List[str],
+              frame: Tuple[str, ...]) -> str:
+        """Permute + None-expand an expression with dims `order` so it
+        broadcasts in the frame."""
+        if not order:
+            return expr
+        want = [v for v in frame if v in order]
+        if want != order:
+            perm = tuple(order.index(v) for v in want)
+            if len(order) == 2 and perm == (1, 0):
+                expr = f"{expr}.T"
+            else:
+                expr = f"xp.transpose({expr}, {perm})"
+            order = want
+        if list(frame) == order:
+            return expr
+        parts = []
+        oi = 0
+        for fv in frame:
+            if oi < len(order) and order[oi] == fv:
+                parts.append(":")
+                oi += 1
+            else:
+                parts.append("None")
+        # trailing-dim broadcasting handles leading missing dims already,
+        # but explicit None keeps semantics obvious and general
+        return f"{expr}[{', '.join(parts)}]"
+
+    def emit_access_aligned(self, acc: VAccess, frame: Tuple[str, ...],
+                            hull: Hull) -> str:
+        sl, order = self.access_slices_and_dims(acc, frame, hull)
+        return self.align(sl, order, frame)
+
+    # -- einsum / dot ------------------------------------------------------
+    def emit_einsum(self, spec: EinsumSpec, frame: Tuple[str, ...],
+                    hull: Hull) -> str:
+        red_lo = {d.var: d.lower for d in spec.reduce_dims}
+        red_hi = {d.var: d.upper for d in spec.reduce_dims}
+        op_strs: List[str] = []
+        for op in spec.operands:
+            sl, _ = self.access_slices_and_dims(op.access, frame, hull,
+                                                red_lo, red_hi)
+            op_strs.append(sl)
+        for m in spec.masks:
+            op_strs.append(self.mask_expr(m, frame, hull, red_lo, red_hi,
+                                          for_einsum=True))
+        result = self.dot_peephole(spec, op_strs)
+        if result is None:
+            opt = ", optimize=True" if self.backend == "np" else ""
+            result = (f"xp.einsum('{spec.spec}', "
+                      + ", ".join(op_strs) + opt + ")")
+            self.meta.raised_ops.append(f"einsum:{spec.spec}")
+        return self.align(result, list(spec.out_vars), frame)
+
+    def dot_peephole(self, spec: EinsumSpec,
+                     op_strs: List[str]) -> Optional[str]:
+        """2-operand single-contraction einsum → np.dot (paper Fig. 6c)."""
+        if not spec.is_dot2():
+            return None
+        (a, b), (sa, sb) = spec.operands, op_strs
+        k = None
+        shared = set(a.letters) & set(b.letters)
+        if len(shared) != 1:
+            return None
+        k = shared.pop()
+        if spec.out_letters and k in spec.out_letters:
+            return None
+
+        def arrange(letters: str, s: str, want_k_last: bool) -> Optional[str]:
+            if len(letters) == 1:
+                return s if letters == k else None
+            if want_k_last:
+                return s if letters[1] == k else f"{s}.T"
+            return s if letters[0] == k else f"{s}.T"
+
+        ea = arrange(a.letters, sa, want_k_last=True)
+        eb = arrange(b.letters, sb, want_k_last=False)
+        if ea is None or eb is None:
+            return None
+        # validate output letter order (i from A, j from B)
+        a_out = a.letters.replace(k, "")
+        b_out = b.letters.replace(k, "")
+        if spec.out_letters != a_out + b_out:
+            if spec.out_letters == b_out + a_out:
+                ea, eb = (eb if len(b.letters) > 1 else eb,
+                          ea)
+                ea, eb = arrange(b.letters, sb, True), arrange(
+                    a.letters, sa, False)
+                if ea is None or eb is None:
+                    return None
+            else:
+                return None
+        self.meta.raised_ops.append("dot")
+        return f"xp.dot({ea}, {eb})"
+
+    # -- masks --------------------------------------------------------------
+    def mask_expr(self, m: MaskOperand, frame, hull: Hull,
+                  red_lo: Dict[str, Affine], red_hi: Dict[str, Affine],
+                  for_einsum: bool) -> str:
+        dlo = red_lo.get(m.row_var) or hull.lo[m.row_var]
+        dhi = red_hi.get(m.row_var) or hull.hi[m.row_var]
+        olo = red_lo.get(m.col_var) or hull.lo[m.col_var]
+        ohi = red_hi.get(m.col_var) or hull.hi[m.col_var]
+        n = affine_py(dhi - dlo)
+        mm = affine_py(ohi - olo)
+        big_k = (olo + m.offset) - dlo  # d >= o + K  (K affine)
+        k = affine_py(big_k * -1)  # tri offset = -K
+        dt = "" if for_einsum else ", dtype=bool"
+        # tri(D, O, -K)[d, o] = (o <= d - K) = (d >= o + K)
+        tri = f"xp.tri({n}, {mm}, {k}{dt})"
+        if m.op == ">=":
+            return tri
+        return f"(1 - {tri})" if for_einsum else f"(~{tri})"
+
+    def write_mask_expr(self, conds, frame: Tuple[str, ...],
+                        hull: Hull) -> str:
+        if len(frame) != 2:
+            raise RaiseError("masked write needs 2-D frame")
+        r, c = frame
+        rlo, rhi = hull.lo[r], hull.hi[r]
+        clo, chi = hull.lo[c], hull.hi[c]
+        rn, cn = affine_py(rhi - rlo), affine_py(chi - clo)
+        terms = []
+        for dep, outer, op, off in conds:
+            if dep == c and outer == r:
+                big_k = (rlo + off) - clo
+                k = affine_py(big_k - 1)
+                tri = f"xp.tri({rn}, {cn}, {k}, dtype=bool)"
+                terms.append(f"(~{tri})" if op == ">=" else tri)
+            elif dep == r and outer == c:
+                big_k = (clo + off) - rlo
+                k = affine_py(big_k * -1)
+                tri = f"xp.tri({rn}, {cn}, {k}, dtype=bool)"
+                terms.append(tri if op == ">=" else f"(~{tri})")
+            else:
+                raise RaiseError("mask vars outside frame")
+        return " & ".join(terms)
+
+    # -- statement emission ---------------------------------------------
+    def emit_raised(self, u: RaisedUnit) -> None:
+        stmt = u.stmt
+        try:
+            self._emit_raised_fast(stmt)
+        except (RaiseError, EmitError):
+            if self.backend == "jnp":
+                raise EmitError("loop fallback infeasible on accelerator")
+            self._emit_loops(stmt)
+        if stmt.write_full or stmt.write_is_temp:
+            self.define_syms_for(stmt.write_array)
+
+    def _emit_raised_fast(self, stmt: CanonStmt) -> None:
+        dims = self.free_dims(stmt)
+        hull = compute_hull(dims)
+        # frame follows the WRITE's dim order (cov[j][i] = f(i,j) must
+        # emit the rhs transposed), then any remaining domain iterators
+        domain_order = [d.var for d in dims]
+        write_order: List[str] = []
+        for idx in stmt.write_idx:
+            for v in idx.vars():
+                if v in domain_order and v not in write_order:
+                    write_order.append(v)
+        frame = tuple(write_order +
+                      [v for v in domain_order if v not in write_order])
+        rhs = normalize(stmt.rhs)
+        plan = plan_write(stmt, hull)
+        expr = self.emit_expr(rhs, frame, hull)
+
+        arr = stmt.write_array
+        if plan.kind in ("full", "scalar"):
+            if stmt.aug is None:
+                self.w(f"{arr} = {expr}")
+            else:
+                self.w(f"{arr} = {arr} {stmt.aug} ({expr})")
+            return
+
+        if plan.kind == "diag":
+            v = frame[0]
+            iv = self.fresh("ix")
+            self.w(f"{iv} = xp.arange({affine_py(hull.lo[v])}, "
+                   f"{affine_py(hull.hi[v])})")
+            comps = []
+            for idx in stmt.write_idx:
+                ivars = [x for x in idx.vars() if x in frame]
+                if ivars:
+                    rest = idx.drop(ivars)
+                    off = f" + {affine_py(rest)}" if not rest.is_zero() \
+                        else ""
+                    comps.append(f"{iv}{off}")
+                else:
+                    comps.append(affine_py(idx))
+            tgt = f"{arr}[{', '.join(comps)}]"
+            self._store(arr, ", ".join(comps), tgt, expr, stmt.aug)
+            return
+
+        # slice / masked
+        comps = []
+        for idx in stmt.write_idx:
+            ivars = [x for x in idx.vars() if x in frame]
+            if not ivars:
+                comps.append(affine_py(idx))
+                continue
+            v = ivars[0]
+            rest = idx.drop([v])
+            comps.append(f"{affine_py(hull.lo[v] + rest)}:"
+                         f"{affine_py(hull.hi[v] + rest)}")
+        sl = ", ".join(comps)
+        tgt = f"{arr}[{sl}]"
+        if plan.kind == "slice":
+            self._store(arr, sl, tgt, expr, stmt.aug)
+        else:  # masked
+            mask = self.write_mask_expr(plan.conds, frame, hull)
+            mv = self.fresh("m")
+            self.w(f"{mv} = {mask}")
+            if stmt.aug is None:
+                combined = expr
+            else:
+                combined = f"{tgt} {stmt.aug} ({expr})"
+            where = f"xp.where({mv}, {combined}, {tgt})"
+            self._store(arr, sl, tgt, where, None)
+
+    def _store(self, arr: str, sl: str, tgt: str, expr: str,
+               aug: Optional[str]) -> None:
+        if self.backend == "np":
+            if aug is None:
+                self.w(f"{tgt} = {expr}")
+            else:
+                self.w(f"{tgt} {aug}= {expr}")
+        else:
+            if aug is None:
+                self.w(f"{arr} = {arr}.at[{sl}].set({expr})")
+            elif aug == "+":
+                self.w(f"{arr} = {arr}.at[{sl}].add({expr})")
+            elif aug == "*":
+                self.w(f"{arr} = {arr}.at[{sl}].multiply({expr})")
+            else:
+                raise EmitError(f"aug {aug} on accelerator")
+
+    # -- loop fallback (np backend only) -----------------------------------
+    def _emit_loops(self, stmt: CanonStmt) -> None:
+        self.meta.jax_ok = False
+        self.meta.raised_ops.append("loop-fallback")
+        dims = self.free_dims(stmt)
+        for d in dims:
+            self.w(f"for {d.var} in range({affine_py(d.lower)}, "
+                   f"{affine_py(d.upper)}, {d.step}):")
+            self.depth += 1
+        rhs = normalize(stmt.rhs)
+        expr = self._scalar_expr(rhs)
+        comps = [affine_py(i) for i in stmt.write_idx]
+        if stmt.write_full or stmt.write_is_temp or not comps:
+            tgt = stmt.write_array
+        else:
+            tgt = f"{stmt.write_array}[{', '.join(comps)}]"
+        if stmt.aug is None:
+            self.w(f"{tgt} = {expr}")
+        else:
+            self.w(f"{tgt} {stmt.aug}= {expr}")
+        self.depth -= len(dims)
+
+    def _scalar_expr(self, e: VExpr) -> str:
+        if isinstance(e, VConst):
+            return repr(e.value)
+        if isinstance(e, VParam):
+            return e.name
+        if isinstance(e, VUnary):
+            inner = self._scalar_expr(e.operand)
+            if e.fn == "-":
+                return f"(-{inner})"
+            return f"xp.{e.fn[3:]}({inner})" if e.fn.startswith("np.") \
+                else f"{e.fn}({inner})"
+        if isinstance(e, VBin):
+            l, r = self._scalar_expr(e.left), self._scalar_expr(e.right)
+            if e.op.startswith("np."):
+                return f"xp.{e.op[3:]}({l}, {r})"
+            return f"({l} {e.op} {r})"
+        if isinstance(e, VAccess):
+            comps = [affine_py(i) for i in e.idx]
+            return f"{e.array}[{', '.join(comps)}]" if comps else e.array
+        if isinstance(e, VReduce):
+            # emit an inline generator-sum (slow but correct)
+            gens = "".join(
+                f" for {d.var} in range({affine_py(d.lower)}, "
+                f"{affine_py(d.upper)}, {d.step})" for d in e.dims)
+            return f"sum({self._scalar_expr(e.child)}{gens})"
+        raise EmitError(type(e).__name__)
+
+    # -- other units ------------------------------------------------------
+    def emit_fft(self, u: FFTUnit) -> None:
+        st = u.stmt
+        axis = st.axis if st.axis is not None else -1
+        n = f", n={affine_py(st.n)}" if st.n is not None else ""
+        fn = "xp.fft." + st.fn.split(".")[-1]
+        self.w(f"{st.out} = {fn}({st.src}{n}, axis={axis})")
+        self.meta.raised_ops.append("fft")
+        self.define_syms_for(st.out)
+
+    def emit_opaque(self, u: OpaqueUnit) -> None:
+        if self.backend == "jnp":
+            raise EmitError("black-box statement: accelerator infeasible")
+        self.meta.jax_ok = False
+        for s in u.item.stmts:
+            for line in unparse_tir(s):
+                self.w(line)
+
+    def emit_seq_loop(self, u: SeqLoopUnit) -> None:
+        d = u.dim
+        self.w(f"for {d.var} in range({affine_py(d.lower)}, "
+               f"{affine_py(d.upper)}, {d.step}):")
+        self.depth += 1
+        self.bound.add(d.var)
+        if not u.body:
+            self.w("pass")
+        for b in u.body:
+            self.emit_unit(b)
+        self.bound.discard(d.var)
+        self.depth -= 1
+
+    def emit_pfor(self, u: PforUnit) -> None:
+        if self.backend == "jnp":
+            raise EmitError("pfor: accelerator variant not generated")
+        self.meta.uses_pfor = True
+        idx = self.meta.pfor_count
+        self.meta.pfor_count += 1
+        d = u.dim
+        body_name = f"__pfor_body_{idx}"
+        # body function: executes iterations [lo, hi)
+        self.w(f"def {body_name}(__lo, __hi):")
+        self.depth += 1
+        self.w(f"for {d.var} in range(__lo, __hi, {d.step}):")
+        self.depth += 1
+        self.bound.add(d.var)
+        if not u.body:
+            self.w("pass")
+        for b in u.body:
+            self.emit_unit(b)
+        self.bound.discard(d.var)
+        self.depth -= 2
+        tile = u.tile if u.tile is not None else "None"
+        self.w(f"__pfor_run({body_name}, {affine_py(d.lower)}, "
+               f"{affine_py(d.upper)}, {tile})")
+        self.meta.raised_ops.append("pfor")
+
+    def emit_unit(self, u: Unit) -> None:
+        if isinstance(u, RaisedUnit):
+            self.emit_raised(u)
+        elif isinstance(u, FFTUnit):
+            self.emit_fft(u)
+        elif isinstance(u, OpaqueUnit):
+            self.emit_opaque(u)
+        elif isinstance(u, SeqLoopUnit):
+            self.emit_seq_loop(u)
+        elif isinstance(u, PforUnit):
+            self.emit_pfor(u)
+        else:  # pragma: no cover
+            raise TypeError(type(u))
+
+
+# ---------------------------------------------------------------------------
+# TIR unparse (black-box re-emission)
+# ---------------------------------------------------------------------------
+
+def unparse_expr(e: tir.Expr) -> str:
+    if isinstance(e, tir.Const):
+        return repr(e.value)
+    if isinstance(e, tir.Name):
+        return e.id
+    if isinstance(e, tir.BinOp):
+        return f"({unparse_expr(e.left)} {e.op} {unparse_expr(e.right)})"
+    if isinstance(e, tir.UnaryOp):
+        return f"(-{unparse_expr(e.operand)})"
+    if isinstance(e, tir.Compare):
+        return f"({unparse_expr(e.left)} {e.op} {unparse_expr(e.right)})"
+    if isinstance(e, tir.Subscript):
+        comps = []
+        for i in e.indices:
+            if isinstance(i, tir.IndexExpr):
+                comps.append(unparse_expr(i.value))
+            else:
+                lo = unparse_expr(i.lo) if i.lo else ""
+                hi = unparse_expr(i.hi) if i.hi else ""
+                comps.append(f"{lo}:{hi}")
+        return f"{unparse_expr(e.base)}[{', '.join(comps)}]"
+    if isinstance(e, tir.Call):
+        if e.fn == "method.T":
+            return f"{unparse_expr(e.args[0])}.T"
+        if e.fn == "method.shape":
+            return f"{unparse_expr(e.args[0])}.shape"
+        args = [unparse_expr(a) for a in e.args]
+        if e.fn.startswith("method."):
+            recv = args[0]
+            rest = args[1:]
+            call = f"{recv}.{e.fn[7:]}"
+            args = rest
+        elif e.fn.startswith("np."):
+            call = "xp." + e.fn[3:]
+        else:
+            call = e.fn
+        kw = [f"{k}={unparse_expr(v)}" for k, v in e.kwargs.items()]
+        return f"{call}({', '.join(args + kw)})"
+    raise EmitError(f"unparse {type(e).__name__}")
+
+
+def unparse_tir(s: tir.Stmt, depth: int = 0) -> List[str]:
+    pad = "    " * depth
+    if isinstance(s, tir.Opaque):
+        return [pad + ln for ln in s.src.splitlines()]
+    if isinstance(s, tir.Assign):
+        op = f"{s.aug}=" if s.aug else "="
+        return [pad + f"{unparse_expr(s.target)} {op} "
+                      f"{unparse_expr(s.value)}"]
+    if isinstance(s, tir.For):
+        step = unparse_expr(s.step) if s.step is not None else "1"
+        out = [pad + f"for {s.var} in range({unparse_expr(s.lo)}, "
+                     f"{unparse_expr(s.hi)}, {step}):"]
+        for b in s.body:
+            out.extend(unparse_tir(b, depth + 1))
+        return out
+    if isinstance(s, tir.If):
+        out = [pad + f"if {unparse_expr(s.cond)}:"]
+        for b in s.body:
+            out.extend(unparse_tir(b, depth + 1))
+        if s.orelse:
+            out.append(pad + "else:")
+            for b in s.orelse:
+                out.extend(unparse_tir(b, depth + 1))
+        return out
+    if isinstance(s, tir.Return):
+        return [pad + ("return" if s.value is None
+                       else f"return {unparse_expr(s.value)}")]
+    if isinstance(s, tir.ExprStmt):
+        return [pad + unparse_expr(s.value)]
+    raise EmitError(f"unparse stmt {type(s).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# Whole-function assembly
+# ---------------------------------------------------------------------------
+
+@dataclass
+class GeneratedVariant:
+    source: str
+    fn_name: str
+    backend: str
+    meta: EmitMeta
+    returns_written: bool  # jnp variant returns tuple of written arrays
+    written: List[str]
+
+
+def generate(sched: Schedule, backend: str) -> GeneratedVariant:
+    fn = sched.program.fn
+    param_names = [n for n, _ in fn.params]
+    em = Emitter(sched, backend)
+
+    # Preamble: list→array conversion and shape symbols. Symbols for
+    # arrays defined in the body are deferred until their definition.
+    list_params = [n for n, t in fn.params if t.kind == "list"]
+    array_params = [n for n, t in fn.params if t.is_array_like]
+    for n in (array_params if backend == "jnp" else list_params):
+        em.w(f"{n} = xp.asarray({n})")
+    shape_syms = sorted({
+        v
+        for v in _all_affine_vars(sched)
+        if "__d" in v
+    })
+    param_set = set(param_names)
+    for sym in shape_syms:
+        arr, d = sym.rsplit("__d", 1)
+        if arr in param_set:
+            em.w(f"{sym} = {arr}.shape[{d}]")
+        else:
+            em.pending_syms.setdefault(arr, []).append(sym)
+
+    for u in sched.units:
+        em.emit_unit(u)
+
+    written_params = [wn for wn in sched.written if wn in param_names]
+    if backend == "jnp":
+        returned = written_params
+    else:
+        # np backend mutates ndarrays in place, but list-typed params were
+        # converted to local arrays — return those for dispatcher copy-back
+        returned = [wn for wn in written_params if wn in list_params]
+    if returned:
+        em.w("return (" + ", ".join(returned)
+             + ("," if len(returned) == 1 else "") + ")")
+    else:
+        em.w("return None")
+
+    name = f"{fn.name}__{backend}_opt"
+    head = f"def {name}({', '.join(param_names)}):"
+    src = head + "\n" + "\n".join(em.lines) + "\n"
+    return GeneratedVariant(src, name, backend, em.meta,
+                            bool(returned), returned)
+
+
+def _all_affine_vars(sched: Schedule):
+    out: Set[str] = set()
+
+    def from_stmt(s: CanonStmt):
+        for d in list(s.domain.dims) + list(s.reduce_dims()):
+            out.update(d.lower.vars())
+            out.update(d.upper.vars())
+        for idx in s.write_idx:
+            out.update(idx.vars())
+        for acc_idx in _stmt_access_vars(s.rhs):
+            out.update(acc_idx)
+
+    def rec(units):
+        for u in units:
+            if isinstance(u, RaisedUnit):
+                from_stmt(u.stmt)
+            elif isinstance(u, FFTUnit):
+                if u.stmt.n is not None:
+                    out.update(u.stmt.n.vars())
+            elif isinstance(u, (SeqLoopUnit, PforUnit)):
+                out.update(u.dim.lower.vars())
+                out.update(u.dim.upper.vars())
+                rec(u.body)
+
+    rec(sched.units)
+    return out
+
+
+def _stmt_access_vars(e: VExpr):
+    if isinstance(e, VAccess):
+        yield [v for idx in e.idx for v in idx.vars()]
+    elif isinstance(e, VBin):
+        yield from _stmt_access_vars(e.left)
+        yield from _stmt_access_vars(e.right)
+    elif isinstance(e, VUnary):
+        yield from _stmt_access_vars(e.operand)
+    elif isinstance(e, VReduce):
+        for d in e.dims:
+            yield list(d.lower.vars()) + list(d.upper.vars())
+        yield from _stmt_access_vars(e.child)

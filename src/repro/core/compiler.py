@@ -1,0 +1,90 @@
+"""Public compiler API: ``automphc.optimize`` — the whole paper in one call.
+
+    from repro.core.compiler import optimize
+
+    @optimize                       # or optimize(distribute=True, ...)
+    def kernel(data: 'ndarray[f64,2]', corr: 'ndarray[f64,2]', M: int, N: int):
+        ...
+
+Pipeline (paper Fig. 4): Front-end (parse + type inference) → SCoP
+extraction (explicit+implicit loop unification) → dependence analysis →
+scheduling (absorption / distribution / pfor) → operator raising → code
+generation (np + jnp variants) → multi-version dispatcher.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+from . import codegen, cost, parser, schedule as schedule_mod, scop
+from .multiversion import CompiledKernel, Variant
+from .pfor import PforConfig
+
+
+def _exec_variant(gen: codegen.GeneratedVariant, xp, extra: Dict) -> Callable:
+    ns: Dict = {"xp": xp}
+    ns.update(extra)
+    exec(compile(gen.source, f"<automphc:{gen.fn_name}>", "exec"), ns)
+    return ns[gen.fn_name]
+
+
+def compile_kernel(
+    fn: Callable,
+    *,
+    distribute: bool = True,
+    runtime=None,
+    tile: Optional[int] = None,
+    workers: int = 4,
+    accel_threshold: float = cost.ACCEL_FLOP_THRESHOLD,
+    enable_jax: bool = True,
+) -> CompiledKernel:
+    tir_fn = parser.parse_function(fn)
+    program = scop.extract(tir_fn)
+    sched = schedule_mod.schedule(program, distribute=distribute)
+
+    pfor_cfg = PforConfig(runtime=runtime, tile=tile, workers=workers)
+    pfor_cfg.distribute_threshold = cost.DISTRIBUTE_FLOP_THRESHOLD
+
+    variants: Dict[str, Variant] = {
+        "original": Variant("original", fn),
+    }
+
+    # Optimized NumPy variant (always attempted; falls back statement-wise)
+    gen_np = codegen.generate(sched, "np")
+    np_fn = _exec_variant(gen_np, np,
+                          {"__pfor_run": pfor_cfg.make_runner()})
+    variants["np"] = Variant("np", np_fn, gen_np)
+
+    # Accelerator variant — all-or-nothing, like the paper's CuPy conversion
+    if enable_jax and not sched.has_opaque and not sched.has_pfor:
+        try:
+            gen_jnp = codegen.generate(sched, "jnp")
+            import jax
+
+            # Numeric kernels carry float64 semantics (PolyBench); the LM
+            # stack requests bf16/f32 explicitly so this is safe globally.
+            jax.config.update("jax_enable_x64", True)
+            import jax.numpy as jnp
+
+            jnp_fn = _exec_variant(gen_jnp, jnp, {})
+            variants["jnp"] = Variant("jnp", jnp_fn, gen_jnp)
+        except codegen.EmitError:
+            pass
+
+    return CompiledKernel(fn, tir_fn.params, sched, variants,
+                          pfor_config=pfor_cfg,
+                          accel_threshold=accel_threshold)
+
+
+def optimize(fn: Optional[Callable] = None, **kw):
+    """Decorator form of :func:`compile_kernel`."""
+    if fn is not None and callable(fn):
+        return compile_kernel(fn, **kw)
+
+    def deco(f):
+        return compile_kernel(f, **kw)
+
+    return deco

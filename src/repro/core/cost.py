@@ -1,0 +1,172 @@
+"""Cost model: profitability conditions + TPU roofline terms.
+
+The paper's profitability conditions are "a threshold expression using loop
+counts" (§4.3). We upgrade that to a roofline cost model — the same three
+terms (compute / memory / collective) the launch-time planner and the
+EXPERIMENTS.md analysis use — while keeping the simple loop-count form
+available for the kernel dispatcher.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from .isl_lite import Affine, Domain, LoopDim
+from .schedule import (FFTUnit, OpaqueUnit, PforUnit, RaisedUnit, Schedule,
+                       SeqLoopUnit, Unit)
+from .scop import CanonStmt, VAccess, VBin, VReduce, VUnary, vexpr_accesses
+
+
+# ---------------------------------------------------------------------------
+# Hardware model (TPU v5e target; CPU host for the offline container)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_flops: float        # FLOP/s (bf16 systolic)
+    hbm_bw: float            # bytes/s
+    ici_bw: float            # bytes/s per link
+    hbm_bytes: float
+    vmem_bytes: float
+
+
+TPU_V5E = ChipSpec(
+    name="tpu_v5e",
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    ici_bw=50e9,
+    hbm_bytes=16 * 2**30,
+    vmem_bytes=128 * 2**20,
+)
+
+# The host CPU in this container — used only for kernel-dispatch
+# profitability thresholds, not for roofline reporting.
+HOST_CPU = ChipSpec(
+    name="host_cpu",
+    peak_flops=5e10,
+    hbm_bw=1e10,
+    ici_bw=1e9,
+    hbm_bytes=8 * 2**30,
+    vmem_bytes=32 * 2**10,
+)
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+# ---------------------------------------------------------------------------
+# Kernel-level FLOP estimation (profitability for the dispatcher)
+# ---------------------------------------------------------------------------
+
+def _card(domain_dims: Iterable[LoopDim], env: Dict[str, int]) -> float:
+    d = Domain(tuple(domain_dims))
+    try:
+        return float(d.cardinality(env))
+    except Exception:
+        # unbound symbol: assume a nominal extent
+        total = 1.0
+        for dim in d.dims:
+            ext = dim.upper - dim.lower
+            if ext.is_constant():
+                total *= max(1, ext.const)
+            else:
+                total *= 256.0
+        return total
+
+
+def _expr_flops_per_point(e, env: Dict[str, int]) -> float:
+    if isinstance(e, VReduce):
+        inner = _expr_flops_per_point(e.child, env) + 1.0
+        return inner * max(1.0, _card(e.dims, env))
+    if isinstance(e, VBin):
+        return 1.0 + _expr_flops_per_point(e.left, env) \
+            + _expr_flops_per_point(e.right, env)
+    if isinstance(e, VUnary):
+        return 1.0 + _expr_flops_per_point(e.operand, env)
+    return 0.0
+
+
+def stmt_flops(stmt: CanonStmt, env: Dict[str, int]) -> float:
+    # out-domain card × per-point flops (reductions folded in)
+    dims = list(stmt.domain.dims)
+    pts = _card(dims, env)
+    return pts * max(1.0, _expr_flops_per_point(stmt.rhs, env))
+
+
+def schedule_flops(sched: Schedule, env: Dict[str, int]) -> float:
+    total = 0.0
+
+    def rec(units: List[Unit], mult: float):
+        nonlocal total
+        for u in units:
+            if isinstance(u, RaisedUnit):
+                total += mult * stmt_flops(u.stmt, env)
+            elif isinstance(u, FFTUnit):
+                total += mult * 5e4  # nominal per-call
+            elif isinstance(u, (SeqLoopUnit, PforUnit)):
+                ext = u.dim.upper - u.dim.lower
+                if ext.is_constant():
+                    m = max(1, ext.const)
+                else:
+                    try:
+                        m = max(1, ext.evaluate(env))
+                    except Exception:
+                        m = 64
+                rec(u.body, mult * m)
+
+    rec(sched.units, 1.0)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Profitability thresholds (decision-tree leaves, paper §4.1/§4.3)
+# ---------------------------------------------------------------------------
+
+# Accelerator dispatch is worth it only above this many FLOPs per call
+# (device transfer + dispatch overheads dominate below it).
+ACCEL_FLOP_THRESHOLD = 5e6
+
+# Distributing a pfor across workers is worth it above this much work.
+DISTRIBUTE_FLOP_THRESHOLD = 1e7
+
+
+def accel_profitable(flops: float,
+                     threshold: float = ACCEL_FLOP_THRESHOLD) -> bool:
+    return flops >= threshold
+
+
+def distribute_profitable(flops: float,
+                          threshold: float = DISTRIBUTE_FLOP_THRESHOLD) -> bool:
+    return flops >= threshold
+
+
+# ---------------------------------------------------------------------------
+# Roofline helpers shared with the launch-time analysis
+# ---------------------------------------------------------------------------
+
+def roofline(flops: float, bytes_hbm: float, bytes_collective: float,
+             chips: int, spec: ChipSpec = TPU_V5E) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=flops / (chips * spec.peak_flops),
+        memory_s=bytes_hbm / (chips * spec.hbm_bw),
+        collective_s=bytes_collective / (chips * spec.ici_bw),
+    )

@@ -1,0 +1,187 @@
+"""Program multi-versioning (paper §4.1).
+
+Builds the runtime decision tree around the generated variants:
+
+    legality (types/ranks match the hints?)          — correctness
+      └─ profitability (enough FLOPs for the accelerator variant?)
+           ├─ yes → jnp variant  (the NumPy→CuPy analogue)
+           ├─ no  → optimized NumPy variant
+      └─ mismatch → original user function (always correct)
+
+"All the conditions are organized as decision trees, where legality
+conditions are located at higher levels while profitability conditions are
+at lower levels."
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from . import cost
+from .codegen import GeneratedVariant
+from .schedule import Schedule
+from .types import TypeInfo, matches, runtime_typeinfo
+
+
+@dataclass
+class Variant:
+    name: str                    # 'jnp' | 'np' | 'original'
+    fn: Callable
+    generated: Optional[GeneratedVariant] = None
+    calls: int = 0
+    total_s: float = 0.0
+
+
+@dataclass
+class DispatchRecord:
+    variant: str
+    legality_ok: bool
+    flops: float
+    profitable: bool
+
+
+class CompiledKernel:
+    """Callable decision tree over specialized variants."""
+
+    def __init__(self, original: Callable, params: List[Tuple[str, TypeInfo]],
+                 sched: Schedule, variants: Dict[str, Variant],
+                 pfor_config=None,
+                 accel_threshold: float = cost.ACCEL_FLOP_THRESHOLD):
+        self.original = original
+        self.params = params
+        self.sched = sched
+        self.variants = variants
+        self.pfor_config = pfor_config
+        self.accel_threshold = accel_threshold
+        self.history: List[DispatchRecord] = []
+        self._flop_cache: Dict[Tuple, float] = {}
+        self.__name__ = getattr(original, "__name__", "kernel")
+        self.__doc__ = getattr(original, "__doc__", None)
+
+    # -- helpers --------------------------------------------------------
+    def _bind(self, args, kwargs) -> Dict[str, Any]:
+        names = [n for n, _ in self.params]
+        bound = dict(zip(names, args))
+        bound.update(kwargs)
+        return bound
+
+    def _legality(self, bound: Dict[str, Any]) -> bool:
+        for name, hint in self.params:
+            if name not in bound:
+                return False
+            if not matches(hint, runtime_typeinfo(bound[name])):
+                return False
+        return True
+
+    def _size_env(self, bound: Dict[str, Any]) -> Dict[str, int]:
+        env: Dict[str, int] = {}
+        for name, val in bound.items():
+            if isinstance(val, (int, np.integer)) and not isinstance(
+                    val, bool):
+                env[name] = int(val)
+            arr = val
+            if isinstance(arr, list):
+                shape = []
+                x = arr
+                while isinstance(x, list):
+                    shape.append(len(x))
+                    x = x[0] if x else None
+                for d, s in enumerate(shape):
+                    env[f"{name}__d{d}"] = s
+            elif hasattr(arr, "shape"):
+                for d, s in enumerate(arr.shape):
+                    env[f"{name}__d{d}"] = int(s)
+        return env
+
+    def estimate_flops(self, bound: Dict[str, Any]) -> float:
+        key = tuple(sorted(self._size_env(bound).items()))
+        if key not in self._flop_cache:
+            self._flop_cache[key] = cost.schedule_flops(
+                self.sched, dict(key))
+        return self._flop_cache[key]
+
+    # -- the decision tree ------------------------------------------------
+    def select(self, bound: Dict[str, Any]) -> Tuple[Variant,
+                                                     DispatchRecord]:
+        legal = self._legality(bound)
+        if not legal:
+            rec = DispatchRecord("original", False, 0.0, False)
+            return self.variants["original"], rec
+        flops = self.estimate_flops(bound)
+        profitable = cost.accel_profitable(flops, self.accel_threshold)
+        if profitable and "jnp" in self.variants:
+            rec = DispatchRecord("jnp", True, flops, True)
+            return self.variants["jnp"], rec
+        if "np" in self.variants:
+            rec = DispatchRecord("np", True, flops, profitable)
+            return self.variants["np"], rec
+        rec = DispatchRecord("original", True, flops, profitable)
+        return self.variants["original"], rec
+
+    def __call__(self, *args, **kwargs):
+        bound = self._bind(args, kwargs)
+        variant, rec = self.select(bound)
+        self.history.append(rec)
+        if self.pfor_config is not None:
+            self.pfor_config.estimated_flops = rec.flops
+        t0 = time.perf_counter()
+        out = self._invoke(variant, bound)
+        variant.calls += 1
+        variant.total_s += time.perf_counter() - t0
+        return out
+
+    def call_variant(self, name: str, *args, **kwargs):
+        """Force a specific variant (benchmark harness hook)."""
+        bound = self._bind(args, kwargs)
+        if self.pfor_config is not None:
+            self.pfor_config.estimated_flops = self.estimate_flops(bound)
+        return self._invoke(self.variants[name], bound)
+
+    def _invoke(self, variant: Variant, bound: Dict[str, Any]):
+        names = [n for n, _ in self.params]
+        args = [bound[n] for n in names]
+        if variant.name == "original":
+            return variant.fn(*args)
+        result = variant.fn(*args)
+        gen = variant.generated
+        if gen is not None and gen.returns_written and result is not None:
+            outs = result if isinstance(result, tuple) else (result,)
+            for name, val in zip(gen.written, outs):
+                orig = bound[name]
+                self._copy_back(orig, val)
+            return None
+        return result
+
+    @staticmethod
+    def _copy_back(orig, val):
+        arr = np.asarray(val)
+        if isinstance(orig, np.ndarray):
+            np.copyto(orig, arr.astype(orig.dtype, copy=False))
+        elif isinstance(orig, list):
+            data = arr.tolist()
+            orig[:] = data
+        # scalars: caller keeps its own copy; nothing to write back
+
+    # -- introspection ------------------------------------------------------
+    def source(self, backend: str = "np") -> str:
+        v = self.variants.get(backend)
+        if v is None or v.generated is None:
+            raise KeyError(f"no generated source for backend {backend!r}")
+        return v.generated.source
+
+    def explain(self) -> str:
+        lines = [f"CompiledKernel({self.__name__})"]
+        lines.append("  decision tree:")
+        lines.append("    legality: type/rank hints "
+                     f"{[(n, t.kind, t.dtype, t.rank) for n, t in self.params]}")
+        lines.append(f"    profitability: flops >= {self.accel_threshold:g}"
+                     " → accelerator variant")
+        for name, v in self.variants.items():
+            ops = (v.generated.meta.raised_ops if v.generated else [])
+            lines.append(f"  variant {name}: calls={v.calls} "
+                         f"time={v.total_s:.4f}s raised={ops}")
+        return "\n".join(lines)

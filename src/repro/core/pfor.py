@@ -1,0 +1,63 @@
+"""pfor execution: the generated `__pfor_run` hook.
+
+Generated kernels call ``__pfor_run(body, lo, hi, tile)`` where ``body(lo,
+hi)`` executes a contiguous chunk of dependence-free iterations, writing
+disjoint regions of the output arrays in place.
+
+Backends (a profitability decision, §4.3):
+  * sequential      — one call; chosen for small iteration counts;
+  * raylite DAG     — chunks submitted as tasks to the runtime/ package
+    (the Ray analogue): futures, lineage fault tolerance, straggler
+    duplicates all apply.
+
+The SPMD (shard_map) mapping of regular pfor loops lives in the LM planner
+(core/planner.py) — numeric kernels distribute via the DAG, matching the
+paper's Ray deployment.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, Optional
+
+
+class PforConfig:
+    """Mutable knob block bound into each compiled kernel."""
+
+    def __init__(self, runtime=None, tile: Optional[int] = None,
+                 workers: int = 4, force_sequential: bool = False):
+        self.runtime = runtime          # runtime.tasks.TaskRuntime or None
+        self.tile = tile
+        self.workers = workers
+        self.force_sequential = force_sequential
+        # filled per call by the dispatcher (profitability input):
+        self.estimated_flops = 0.0
+        self.distribute_threshold = 1e7
+
+    def make_runner(self) -> Callable:
+        def __pfor_run(body, lo, hi, tile):
+            n = max(0, hi - lo)
+            if n == 0:
+                return
+            tile_ = tile or self.tile
+            if tile_ is None:
+                tile_ = max(1, math.ceil(n / max(1, self.workers)))
+            seq = (
+                self.force_sequential
+                or self.runtime is None
+                or n <= 1
+                or self.estimated_flops < self.distribute_threshold
+            )
+            if seq:
+                body(lo, hi)
+                return
+            futures = []
+            t = lo
+            while t < hi:
+                up = min(t + tile_, hi)
+                futures.append(self.runtime.submit(body, t, up))
+                t = up
+            for f in futures:
+                self.runtime.get(f)
+
+        return __pfor_run

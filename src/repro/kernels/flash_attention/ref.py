@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash-attention kernel (plain softmax path)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  softcap: float = 0.0):
+    """q: (B, Sq, H, D); k/v: (B, Skv, KVH, D). GQA via head groups."""
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, d)
+    s = jnp.einsum("bqkgd,bskd->bqkgs", qg, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(d)
+    if softcap and softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    q_pos = jnp.arange(sq)
+    k_pos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window and window > 0:
+        mask &= k_pos[None, :] > (q_pos[:, None] - window)
+    s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqkgs,bskd->bqkgd", p.astype(q.dtype), v)
+    return out.reshape(b, sq, h, d)

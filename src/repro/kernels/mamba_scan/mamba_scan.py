@@ -1,0 +1,78 @@
+"""Selective-scan (Mamba) as a chunked Pallas TPU kernel.
+
+The GPU reference implementation is a warp-parallel prefix scan; the TPU
+adaptation (DESIGN.md §2) is a CHUNKED recurrence: the sequence axis is
+tiled into VMEM-resident chunks scanned by the sequential grid axis, with
+the (I, N) state carried in fp32 scratch. Inside a chunk the recurrence
+runs as an unrolled-on-VPU fori_loop over timesteps — each step is a fully
+vectorized (I, N) elementwise update, which is what the 8×128 VPU wants;
+cross-chunk parallelism comes from the batch grid axis.
+
+VMEM per step = chunk·I (x, dt) + chunk·N (B, C) + I·N state fp32 —
+~1.2 MB at (chunk=128, I=1024, N=16).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, dskip_ref, y_ref,
+                 h_ref, *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    decay = -jnp.exp(a_ref[...])                   # (I, N)
+    x = x_ref[0].astype(jnp.float32)               # (chunk, I)
+    dt = dt_ref[0].astype(jnp.float32)
+    bm = b_ref[0].astype(jnp.float32)              # (chunk, N)
+    cm = c_ref[0].astype(jnp.float32)
+    dskip = dskip_ref[...]                         # (1, I)
+
+    def step(t, carry):
+        h, y = carry
+        a_bar = jnp.exp(dt[t][:, None] * decay)    # (I, N)
+        h = a_bar * h + (dt[t] * x[t])[:, None] * bm[t][None, :]
+        yt = (h * cm[t][None, :]).sum(axis=1)      # (I,)
+        y = jax.lax.dynamic_update_slice_in_dim(y, yt[None], t, axis=0)
+        return h, y
+
+    y0 = jnp.zeros((chunk, x.shape[1]), jnp.float32)
+    h, y = jax.lax.fori_loop(0, chunk, step, (h_ref[...], y0))
+    h_ref[...] = h
+    y_ref[0] = (y + dskip * x).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mamba_scan(x, dt, Bm, Cm, a, d_skip, *, chunk: int = 128,
+               interpret: bool = False):
+    """x/dt: (B, L, I); Bm/Cm: (B, L, N); a: (I, N); d_skip: (I,)."""
+    b, l, inner = x.shape
+    n = Bm.shape[-1]
+    chunk = min(chunk, l)
+    assert l % chunk == 0, (l, chunk)
+    kern = functools.partial(_scan_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kern,
+        grid=(b, l // chunk),
+        in_specs=[
+            pl.BlockSpec((1, chunk, inner), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, inner), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((inner, n), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, inner), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, inner), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, l, inner), x.dtype),
+        scratch_shapes=[pltpu.VMEM((inner, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, Bm, Cm, a, d_skip.reshape(1, -1))

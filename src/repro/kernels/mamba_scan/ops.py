@@ -1,0 +1,21 @@
+"""Public selective-scan wrapper with backend dispatch."""
+
+from __future__ import annotations
+
+import jax
+
+from .mamba_scan import mamba_scan as _kernel
+from .ref import mamba_scan_ref
+
+
+def mamba_scan(x, dt, Bm, Cm, a, d_skip, *, chunk: int = 128,
+               force_pallas: bool = False, interpret: bool = False):
+    on_tpu = jax.default_backend() == "tpu"
+    if not (on_tpu or force_pallas):
+        return mamba_scan_ref(x, dt, Bm, Cm, a, d_skip)
+    l = x.shape[1]
+    c = min(chunk, l)
+    while l % c:
+        c -= 1
+    return _kernel(x, dt, Bm, Cm, a, d_skip, chunk=c,
+                   interpret=interpret or not on_tpu)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the selective-scan kernel: sequential recurrence.
+
+h_t = exp(dt_t ⊙ A) ⊙ h_{t-1} + (dt_t ⊙ x_t) ⊗ B_t ;  y_t = h_t · C_t
+x/dt: (B, L, I);  Bm/Cm: (B, L, N);  a: (I, N) log-decay;  d: (I,) skip.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(x, dt, Bm, Cm, a, d_skip):
+    b, l, inner = x.shape
+    n = Bm.shape[-1]
+    decay = -jnp.exp(a)                              # (I, N)
+
+    def step(h, inputs):
+        xt, dtt, bt, ct = inputs
+        a_bar = jnp.exp(dtt[..., None] * decay[None])      # (B, I, N)
+        h = a_bar * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = (h * ct[:, None, :]).sum(-1)                   # (B, I)
+        return h, y
+
+    h0 = jnp.zeros((b, inner, n), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                             # (B, L, I)
+    return y + d_skip[None, None] * x

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the blocked matmul kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y, out_dtype=None):
+    out_dtype = out_dtype or x.dtype
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(
+        out_dtype)

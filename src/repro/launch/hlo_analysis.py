@@ -1,0 +1,348 @@
+"""Trip-count-corrected analysis of optimized HLO modules.
+
+XLA's ``cost_analysis()`` counts a ``while`` body ONCE, so scanned-layer
+models (every model here: layer scan × grad-accumulation scan × xent
+chunk scan) under-report FLOPs/bytes/collective traffic by the product of
+trip counts. The optimized HLO text carries the exact trip count in each
+while's ``backend_config`` (``"known_trip_count":{"n":"12"}``), so this
+module walks the module from ENTRY, multiplying every instruction's
+contribution by the enclosing loops' trip counts:
+
+  * flops            — dot ops: 2 × result_elems × contracted_extent
+  * memory bytes     — Σ (result + operand bytes) of every materialized
+                       instruction (post-opt HLO: fusion boundaries are
+                       real HBM traffic)
+  * collective bytes — result bytes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute
+                       (output-size convention, applied consistently)
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+                "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+                "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+                "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(
+    r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|f8e4m3b11fnuz|s64|s32|s16|s8|u64|"
+    r"u32|u16|u8|pred|c64|c128)\[([\d,]*)\]")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "add-dependency", "domain"}
+
+
+def shape_bytes(text: str, normalize_f32: bool = False) -> int:
+    """Bytes of all shapes in ``text``. With ``normalize_f32``, f32 counts
+    at bf16 width: the TPU target runs the model in bf16, and every f32
+    buffer the CPU backend materializes around dots is a legalization
+    artifact (CPU has no native bf16 dot). Genuinely-f32 buffers (softmax
+    stats, fp32 grad accumulators) are under-weighted ≤2× — documented in
+    EXPERIMENTS.md §Roofline conventions."""
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        w = _DTYPE_BYTES.get(dt, 4)
+        if normalize_f32 and dt == "f32":
+            w = 2
+        total += n * w
+    return total
+
+
+def shape_elems_first(text: str) -> Tuple[Optional[str], int]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None, 0
+    dims = m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return m.group(1), n
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_text: str          # type portion before opcode
+    operands: List[str]
+    attrs: str                # text after the operand list
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)  # %name → type txt
+    root_opcode: str = ""
+    params: List[str] = field(default_factory=list)  # signature order
+
+
+_COMP_HEAD = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_INSTR = re.compile(r"^(ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE = re.compile(r"^((?:\([^)]*\)|[^ (]+)\s+)?([\w\-]+)\(")
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line or line.startswith("//"):
+            continue
+        if line.endswith("{"):
+            m = _COMP_HEAD.match(line)
+            if m:
+                cur = Computation(m.group(2))
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = cur.name
+                # parameter shapes from the signature (in order)
+                for pm in re.finditer(r"([\w.\-]+)\s*:\s*([^,)]+)",
+                                      m.group(3)):
+                    cur.shapes[pm.group(1)] = pm.group(2)
+                    cur.params.append(pm.group(1))
+                continue
+        if line == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        im = _INSTR.match(line)
+        if not im:
+            continue
+        name, rhs = im.group(2), im.group(3)
+        om = _OPCODE.match(rhs)
+        if not om:
+            continue
+        result_text = om.group(1) or ""
+        opcode = om.group(2)
+        # operands: %names inside the first (...) group after opcode
+        paren = rhs[om.end() - 1:]
+        depth, i, end = 0, 0, len(paren)
+        for i, ch in enumerate(paren):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        oper_text = paren[1:end]
+        attrs = paren[end + 1:]
+        operands = re.findall(r"%([\w.\-]+)", oper_text)
+        instr = Instr(name, opcode, result_text, operands, attrs, line)
+        cur.instrs.append(instr)
+        cur.shapes[name] = result_text if result_text else ""
+        if im.group(1):  # ROOT
+            cur.root_opcode = opcode
+    return comps, entry
+
+
+def _trip_count(instr: Instr) -> int:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', instr.line)
+    if m:
+        return int(m.group(1))
+    return 1
+
+
+def _called(instr: Instr, key: str) -> Optional[str]:
+    m = re.search(key + r"=%([\w.\-]+)", instr.line)
+    return m.group(1) if m else None
+
+
+@dataclass
+class Totals:
+    flops: float = 0.0
+    memory_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    per_kind: Dict[str, float] = field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    counts: Dict[str, float] = field(
+        default_factory=lambda: {k: 0 for k in _COLLECTIVES})
+    max_trip_product: float = 1.0
+    by_opcode: Dict[str, float] = field(default_factory=dict)
+    top_instrs: List[Tuple[float, str]] = field(default_factory=list)
+
+
+# Operands smaller than this are assumed VMEM-resident across loop
+# iterations (counted once, not × trip count) — the standard roofline
+# perfect-cache assumption for small reused tiles (v5e VMEM = 128 MiB).
+VMEM_RESIDENT_BYTES = 16 * 2**20
+
+
+def _dot_flops(instr: Instr, comp: Computation) -> float:
+    _, out_elems = shape_elems_first(instr.result_text)
+    if not out_elems:
+        return 0.0
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.attrs)
+    cdims = [int(x) for x in m.group(1).split(",")] if m and m.group(1) \
+        else []
+    if not instr.operands:
+        return 0.0
+    lhs_shape_text = comp.shapes.get(instr.operands[0], "")
+    sm = _SHAPE_RE.search(lhs_shape_text)
+    contract = 1
+    if sm and sm.group(2):
+        dims = [int(x) for x in sm.group(2).split(",")]
+        for cd in cdims:
+            if cd < len(dims):
+                contract *= dims[cd]
+    return 2.0 * out_elems * contract
+
+
+def analyze(text: str) -> Totals:
+    comps, entry = parse_module(text)
+    tot = Totals()
+    if entry is None:
+        return tot
+
+    def walk(comp_name: str, mult: float, depth: int = 0):
+        comp = comps.get(comp_name)
+        if comp is None or depth > 64:
+            return
+        tot.max_trip_product = max(tot.max_trip_product, mult)
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op == "while":
+                trip = _trip_count(ins)
+                body = _called(ins, "body")
+                cond = _called(ins, "condition")
+                if body:
+                    walk(body, mult * trip, depth + 1)
+                if cond:
+                    walk(cond, mult * trip, depth + 1)
+                continue
+            if op == "conditional":
+                for branch in re.findall(r"(?:branch_computations=\{([^}]*)\}"
+                                         r"|true_computation=%([\w.\-]+)"
+                                         r"|false_computation=%([\w.\-]+))",
+                                         ins.line):
+                    for g in branch:
+                        if g:
+                            for nm in re.findall(r"%?([\w.\-]+)", g):
+                                walk(nm, mult, depth + 1)
+                continue
+            if op in _FREE_OPS:
+                continue
+            base = op
+            started = False
+            for kind in _COLLECTIVES:
+                if base.startswith(kind):
+                    if base.endswith("-done"):
+                        started = True
+                        break
+                    b = shape_bytes(ins.result_text, normalize_f32=True)
+                    tot.collective_bytes += mult * b
+                    tot.per_kind[kind] += mult * b
+                    tot.counts[kind] += mult
+                    started = True
+                    break
+            if started:
+                pass
+            if op in ("dot", "dot_general", "convolution"):
+                tot.flops += mult * _dot_flops(ins, comp)
+            # memory traffic at post-opt boundaries, with in-place /
+            # slice-op semantics (matching HloCostAnalysis conventions):
+            #  * dynamic-slice / gather: only the slice moves;
+            #  * dynamic-update-slice / scatter (incl. fusions rooted at
+            #    them): read+write of the update region, the aliased big
+            #    operand does not stream through HBM.
+            eff_op = op
+            fusion_comp: Optional[Computation] = None
+            if op == "fusion":
+                called = _called(ins, "calls")
+                if called and called in comps:
+                    fusion_comp = comps[called]
+                    root = fusion_comp.root_opcode
+                    if root in ("dynamic-update-slice", "scatter",
+                                "dynamic-slice", "gather"):
+                        eff_op = root
+            # CPU-backend artifact: bf16 dots are legalized by upcasting
+            # operands to f32, materializing identity converts that do not
+            # exist on the TPU target (native bf16 MXU) — elide them.
+            if op in ("convert",) or (
+                    fusion_comp is not None and
+                    fusion_comp.root_opcode == "convert"
+                    and len(ins.operands) == 1):
+                _, res_e = shape_elems_first(ins.result_text)
+                _, op_e = shape_elems_first(
+                    comp.shapes.get(ins.operands[0], "")) \
+                    if ins.operands else (None, 0)
+                if res_e == op_e and res_e > 0:
+                    continue
+            opnd_bytes = [shape_bytes(comp.shapes.get(o, ""),
+                                      normalize_f32=True)
+                          for o in ins.operands]
+            if fusion_comp is not None and eff_op == op:
+                # operand consumed only via dynamic-slice inside the
+                # fusion: only the slices stream from HBM
+                for oi, pname in enumerate(fusion_comp.params):
+                    if oi >= len(opnd_bytes):
+                        break
+                    consumers = [fi for fi in fusion_comp.instrs
+                                 if pname in fi.operands]
+                    if consumers and all(fi.opcode == "dynamic-slice"
+                                         for fi in consumers):
+                        opnd_bytes[oi] = sum(
+                            shape_bytes(fi.result_text, normalize_f32=True)
+                            for fi in consumers)
+            res_bytes = shape_bytes(ins.result_text, normalize_f32=True)
+            if eff_op in ("dynamic-slice", "gather"):
+                b = mult * 2 * res_bytes
+            elif eff_op in ("dynamic-update-slice", "scatter"):
+                small = sum(opnd_bytes) - (max(opnd_bytes)
+                                           if opnd_bytes else 0)
+                b = mult * 2 * small
+            else:
+                # buffers < VMEM_RESIDENT_BYTES inside loops do not
+                # round-trip HBM each iteration (perfect-cache roofline
+                # convention); DS/DUS slices of big buffers (above) do.
+                def _amt(nb: int) -> float:
+                    if mult > 1 and nb < VMEM_RESIDENT_BYTES:
+                        return float(nb)
+                    return mult * float(nb)
+
+                b = _amt(res_bytes)
+                for ob in opnd_bytes:
+                    b += _amt(ob)
+            tot.memory_bytes += b
+            tot.by_opcode[eff_op] = tot.by_opcode.get(eff_op, 0.0) + b
+            if b > 1e8:
+                tot.top_instrs.append((b, ins.line[:140]))
+
+    walk(entry, 1.0)
+    return tot
+
+
+def analyze_compiled(compiled) -> Dict[str, object]:
+    text = compiled.as_text()
+    t = analyze(text)
+    top = sorted(t.by_opcode.items(), key=lambda kv: -kv[1])[:10]
+    return {
+        "flops_corrected": t.flops,
+        "memory_bytes_corrected": t.memory_bytes,
+        "collective_bytes_corrected": t.collective_bytes,
+        "collective_per_kind": t.per_kind,
+        "collective_counts": t.counts,
+        "max_trip_product": t.max_trip_product,
+        "top_memory_opcodes": {k: v for k, v in top},
+        "hlo_bytes": len(text),
+    }

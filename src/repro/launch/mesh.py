@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+Single-pod: (data=16, model=16) = 256 chips (one v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the `pod` axis
+composes with `data` for hierarchical data parallelism (reduce-scatter
+intra-pod over ICI, all-reduce inter-pod over DCN).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state — the dry-run entry point must set XLA_FLAGS before any jax init.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over the actually-present devices (tests, examples)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))

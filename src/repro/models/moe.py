@@ -1,0 +1,150 @@
+"""Mixture-of-Experts FFN with token-choice top-k routing.
+
+Dispatch is the sort-free capacity scheme: per-token expert assignments are
+flattened, positions within each expert computed by a cumulative sum over
+the (tokens·topk, experts) one-hot, tokens beyond capacity dropped, and
+activations scattered into an (experts·capacity, d) buffer that is
+batch-matmul'd against stacked expert weights. This keeps every shape
+static (compile-friendly at 512 devices) without materializing the
+(tokens, experts, capacity) dispatch tensor.
+
+Expert weights carry the 'experts' logical axis → the planner shards them
+over the `model` mesh axis (expert parallelism); the scatter/gather across
+the (data-sharded) token axis and (model-sharded) expert axis is where
+GSPMD inserts the all-to-all — the MoE collective the roofline analysis
+tracks. Experts are padded up to a multiple of the mesh axis when the
+config's count is indivisible (qwen2-moe: 60 → 64), with router logits of
+padded experts masked to -inf (a legality-branch resolution, DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig, KeyGen, _act, _init, rmsnorm
+
+
+def padded_experts(cfg: ArchConfig, tp: int = 16) -> int:
+    e = cfg.n_experts
+    return ((e + tp - 1) // tp) * tp
+
+
+def init_moe(kg: KeyGen, cfg: ArchConfig, tp: int = 16
+             ) -> Tuple[Dict, Dict]:
+    d = cfg.d_model
+    f = cfg.expert_d_ff or cfg.d_ff
+    e_pad = padded_experts(cfg, tp)
+    gated = cfg.mlp_act in ("silu", "gelu")
+    p = {
+        "router": _init(kg(), (d, e_pad), jnp.float32),
+        "wi": _init(kg(), (e_pad, d, f), cfg.dtype),
+        "wo": _init(kg(), (e_pad, f, d), cfg.dtype),
+        "ln": jnp.zeros((d,), cfg.dtype),
+    }
+    s = {
+        "router": ("embed", "experts"),
+        "wi": ("experts", "embed", "mlp"),
+        "wo": ("experts", "mlp", "embed"),
+        "ln": ("embed",),
+    }
+    if gated:
+        p["wg"] = _init(kg(), (e_pad, d, f), cfg.dtype)
+        s["wg"] = ("experts", "embed", "mlp")
+    if cfg.n_shared_experts:
+        p["shared_wi"] = _init(kg(), (d, f * cfg.n_shared_experts),
+                               cfg.dtype)
+        p["shared_wo"] = _init(kg(), (f * cfg.n_shared_experts, d),
+                               cfg.dtype)
+        s["shared_wi"] = ("embed", "mlp")
+        s["shared_wo"] = ("mlp", "embed")
+        if gated:
+            p["shared_wg"] = _init(kg(), (d, f * cfg.n_shared_experts),
+                                   cfg.dtype)
+            s["shared_wg"] = ("embed", "mlp")
+    return p, s
+
+
+def apply_moe(p, x, cfg: ArchConfig):
+    """x: (B, S, D) → (B, S, D) residual-added."""
+    b, s, d = x.shape
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+    t = b * s
+    ht = h.reshape(t, d)
+    e_pad = p["router"].shape[1]
+    k = cfg.experts_topk
+    act = _act(cfg.mlp_act)
+
+    logits = ht.astype(jnp.float32) @ p["router"]  # (T, E)
+    if e_pad != cfg.n_experts:
+        pad_mask = jnp.arange(e_pad) >= cfg.n_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    weights, expert_ids = jax.lax.top_k(logits, k)        # (T, K)
+    weights = jax.nn.softmax(weights, axis=-1).astype(x.dtype)
+
+    # --- capacity + position within expert -----------------------------
+    cap = int(max(1, (t * k // e_pad) * cfg.capacity_factor))
+    flat_e = expert_ids.reshape(-1)                         # (T*K,)
+    onehot = jax.nn.one_hot(flat_e, e_pad, dtype=jnp.int32)  # (T*K, E)
+    pos_in_e = (jnp.cumsum(onehot, axis=0) - 1)             # running count
+    pos = jnp.take_along_axis(pos_in_e, flat_e[:, None],
+                              axis=1)[:, 0]                 # (T*K,)
+    keep = pos < cap
+    slot = jnp.where(keep, flat_e * cap + pos, e_pad * cap)  # overflow slot
+
+    # --- dispatch -------------------------------------------------------
+    xe = jnp.repeat(ht, k, axis=0)                          # (T*K, D)
+    buf = jnp.zeros((e_pad * cap + 1, d), x.dtype).at[slot].add(xe)
+    buf = buf[:-1].reshape(e_pad, cap, d)
+
+    def _anchor(t):
+        """Pin (expert, capacity) dims to the planner's axes: without
+        this, GSPMD propagation can leave the expert einsums replicated
+        over idle mesh axes (a silent 16× compute waste). The capacity
+        dim takes the axes the expert count cannot cover."""
+        if not cfg.moe_expert_axes:
+            return t
+        try:
+            from jax.sharding import PartitionSpec as P_
+
+            ax = tuple(cfg.moe_expert_axes)
+            e_spec = ax if len(ax) > 1 else ax[0]
+            c_ax = tuple(cfg.moe_capacity_axes or ())
+            c_spec = (c_ax if len(c_ax) > 1 else c_ax[0]) if c_ax \
+                else P_.UNCONSTRAINED
+            spec = [e_spec, c_spec] + [P_.UNCONSTRAINED] * (t.ndim - 2)
+            return jax.lax.with_sharding_constraint(t, P_(*spec))
+        except Exception:
+            return t
+
+    buf = _anchor(buf)
+
+    # --- expert computation (batched over experts) -----------------------
+    up = jnp.einsum("ecd,edf->ecf", buf, p["wi"])
+    if "wg" in p:
+        gate = jnp.einsum("ecd,edf->ecf", buf, p["wg"])
+        up = act(gate) * up
+    else:
+        up = act(up)
+    out = _anchor(jnp.einsum("ecf,efd->ecd", up, p["wo"]))  # (E, C, D)
+
+    # --- combine ----------------------------------------------------------
+    out_flat = out.reshape(e_pad * cap, d)
+    out_flat = jnp.concatenate(
+        [out_flat, jnp.zeros((1, d), out_flat.dtype)], axis=0)
+    gathered = out_flat[slot]                               # (T*K, D)
+    gathered = gathered * weights.reshape(-1)[:, None]
+    y = gathered.reshape(t, k, d).sum(axis=1)
+
+    # --- shared experts (dense) -------------------------------------------
+    if "shared_wi" in p:
+        up_s = jnp.einsum("td,df->tf", ht, p["shared_wi"])
+        if "shared_wg" in p:
+            up_s = act(jnp.einsum("td,df->tf", ht, p["shared_wg"])) * up_s
+        else:
+            up_s = act(up_s)
+        y = y + jnp.einsum("tf,fd->td", up_s, p["shared_wo"])
+
+    return x + y.reshape(b, s, d).astype(x.dtype)

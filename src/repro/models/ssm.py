@@ -1,0 +1,245 @@
+"""State-space / recurrent blocks: Mamba (jamba) and xLSTM (mLSTM/sLSTM).
+
+The sequence recurrence is the one iteration dimension the planner must
+never shard (knowledge-base entry 'ssm_scan': sequential on seq, parallel
+on batch/feature). Training uses an associative scan (log-depth, lowers to
+compact HLO); decode keeps an explicit recurrent state — which is why these
+families run the long_500k shape that quadratic attention cannot.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig, KeyGen, _init, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM, Mamba-1 style simplified)
+# ---------------------------------------------------------------------------
+
+def init_mamba(kg: KeyGen, cfg: ArchConfig) -> Tuple[Dict, Dict]:
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    p = {
+        "in_proj": _init(kg(), (d, 2 * inner), cfg.dtype),
+        "x_proj": _init(kg(), (inner, 2 * n + 1), cfg.dtype),
+        "dt_bias": jnp.zeros((inner,), jnp.float32),
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (inner, n))),
+        "d_skip": jnp.ones((inner,), jnp.float32),
+        "out_proj": _init(kg(), (inner, d), cfg.dtype),
+        "ln": jnp.zeros((d,), cfg.dtype),
+    }
+    s = {
+        "in_proj": ("embed", "inner"),
+        "x_proj": ("inner", "ssm"),
+        "dt_bias": ("inner",),
+        "a_log": ("inner", "ssm"),
+        "d_skip": ("inner",),
+        "out_proj": ("inner", "embed"),
+        "ln": ("embed",),
+    }
+    return p, s
+
+
+def _mamba_scan_train(xz, dt, B, C, a, d_skip, use_pallas=False):
+    """Associative scan over seq. xz:(B,L,I) dt:(B,L,I) B/C:(B,L,N)."""
+    if use_pallas:
+        from repro.kernels.mamba_scan import ops as scan_ops
+
+        return scan_ops.mamba_scan(xz, dt, B, C, a, d_skip)
+    # h_t = A_t * h_{t-1} + B_t x_t ; associative over (A, Bx)
+    a_bar = jnp.exp(dt[..., None] * (-jnp.exp(a))[None, None])  # (B,L,I,N)
+    bx = (dt * xz)[..., None] * B[..., None, :]                 # (B,L,I,N)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_cum, h = jax.lax.associative_scan(combine, (a_bar, bx), axis=1)
+    y = (h * C[..., None, :]).sum(-1)                           # (B,L,I)
+    return y + d_skip[None, None] * xz
+
+
+def apply_mamba(p, x, cfg: ArchConfig, state: Optional[Dict] = None):
+    """x: (B, S, D). state (decode): {'h': (B, I, N)}."""
+    b, s, d = x.shape
+    inner = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    h0 = rmsnorm(x, p["ln"], cfg.norm_eps)
+    proj = jnp.einsum("bsd,di->bsi", h0, p["in_proj"])
+    xz, gate = jnp.split(proj, 2, axis=-1)
+    xz = jax.nn.silu(xz)
+    dbc = jnp.einsum("bsi,ik->bsk", xz, p["x_proj"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dbc[..., 0:1] + p["dt_bias"][None, None])
+    Bm, Cm = dbc[..., 1:1 + n], dbc[..., 1 + n:]
+    a = p["a_log"]
+
+    if state is None:
+        y = _mamba_scan_train(xz.astype(jnp.float32), dt, Bm, Cm, a,
+                              p["d_skip"], cfg.use_pallas)
+        new_state = None
+    else:
+        # single-token decode: s == 1
+        a_bar = jnp.exp(dt[:, 0, :, None] * (-jnp.exp(a))[None])
+        bx = (dt[:, 0] * xz[:, 0].astype(jnp.float32))[..., None] \
+            * Bm[:, 0, None, :]
+        h = a_bar * state["h"] + bx                       # (B, I, N)
+        y = (h * Cm[:, 0, None, :]).sum(-1)[:, None]      # (B,1,I)
+        y = y + p["d_skip"][None, None] * xz.astype(jnp.float32)
+        new_state = {"h": h}
+
+    y = (y * jax.nn.silu(gate.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return x + out, new_state
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int) -> Dict:
+    inner = cfg.ssm_expand * cfg.d_model
+    return {"h": jnp.zeros((batch, inner, cfg.ssm_state), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM blocks
+# ---------------------------------------------------------------------------
+
+def init_mlstm(kg: KeyGen, cfg: ArchConfig) -> Tuple[Dict, Dict]:
+    d = cfg.d_model
+    h, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    p = {
+        "wq": _init(kg(), (d, h, hd), cfg.dtype),
+        "wk": _init(kg(), (d, h, hd), cfg.dtype),
+        "wv": _init(kg(), (d, h, hd), cfg.dtype),
+        "wif": _init(kg(), (d, 2 * h), cfg.dtype),  # input+forget gates
+        "wo": _init(kg(), (h, hd, d), cfg.dtype),
+        "ln": jnp.zeros((d,), cfg.dtype),
+    }
+    s = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "heads", "head_dim"),
+        "wv": ("embed", "heads", "head_dim"),
+        "wif": ("embed", "heads"),
+        "wo": ("heads", "head_dim", "embed"),
+        "ln": ("embed",),
+    }
+    return p, s
+
+
+def apply_mlstm(p, x, cfg: ArchConfig, state: Optional[Dict] = None):
+    """Matrix-memory LSTM: per head a (hd × hd) outer-product memory with
+    scalar input/forget gates; parallel (attention-like) form in training,
+    recurrent form in decode."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    xin = rmsnorm(x, p["ln"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", xin, p["wq"]) / math.sqrt(hd)
+    k = jnp.einsum("bsd,dhk->bshk", xin, p["wk"]) / math.sqrt(hd)
+    v = jnp.einsum("bsd,dhk->bshk", xin, p["wv"])
+    gates = jnp.einsum("bsd,dg->bsg", xin, p["wif"]).astype(jnp.float32)
+    i_gate = jnp.exp(jnp.minimum(gates[..., :h], 8.0))       # stabilized
+    f_gate = jax.nn.sigmoid(gates[..., h:])
+
+    if state is None:
+        # parallel form: D[t,τ] = (∏_{j=τ+1..t} f_j) · i_τ  (τ ≤ t)
+        logf = jnp.log(f_gate + 1e-8)                        # (B,S,H)
+        cum = jnp.cumsum(logf, axis=1)
+        decay = cum[:, :, None, :] - cum[:, None, :, :]      # (B,t,τ,H)
+        causal = jnp.tril(jnp.ones((s, s), bool))
+        dmat = jnp.where(causal[None, :, :, None],
+                         jnp.exp(decay) * i_gate[:, None], 0.0)
+        scores = jnp.einsum("bthk,bshk->bths", q, k).astype(jnp.float32)
+        scores = scores * jnp.moveaxis(dmat, 3, 2)           # (B,t,H,τ)
+        norm = jnp.maximum(jnp.abs(scores.sum(-1)), 1.0)
+        out = jnp.einsum("bths,bshk->bthk",
+                         (scores / norm[..., None]).astype(x.dtype), v)
+        new_state = None
+    else:
+        # recurrent: C_t = f C_{t-1} + i (v ⊗ k); y = C_t q / max(|n·q|,1)
+        C, nvec = state["C"], state["n"]
+        f1 = f_gate[:, 0, :, None, None]
+        i1 = i_gate[:, 0, :, None, None]
+        C = f1 * C + i1 * jnp.einsum("bhk,bhl->bhkl",
+                                     v[:, 0].astype(jnp.float32),
+                                     k[:, 0].astype(jnp.float32))
+        nvec = f_gate[:, 0, :, None] * nvec \
+            + i_gate[:, 0, :, None] * k[:, 0].astype(jnp.float32)
+        num = jnp.einsum("bhkl,bhl->bhk", C, q[:, 0].astype(jnp.float32))
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhl,bhl->bh", nvec,
+                               q[:, 0].astype(jnp.float32))), 1.0)
+        out = (num / den[..., None])[:, None].astype(x.dtype)
+        new_state = {"C": C, "n": nvec}
+
+    # head-wise normalization (xLSTM applies GroupNorm before out-proj)
+    out32 = out.astype(jnp.float32)
+    var = jnp.mean(jnp.square(out32), axis=-1, keepdims=True)
+    out = (out32 * jax.lax.rsqrt(var + 1e-6)).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return x + y.astype(x.dtype), new_state
+
+
+def init_slstm(kg: KeyGen, cfg: ArchConfig) -> Tuple[Dict, Dict]:
+    d = cfg.d_model
+    p = {
+        "wx": _init(kg(), (d, 4 * d), cfg.dtype),   # i, f, z, o pre-acts
+        "wh": _init(kg(), (d, 4 * d), cfg.dtype),
+        "ln": jnp.zeros((d,), cfg.dtype),
+    }
+    s = {"wx": ("embed", "inner"), "wh": ("embed", "inner"),
+         "ln": ("embed",)}
+    return p, s
+
+
+def apply_slstm(p, x, cfg: ArchConfig, state: Optional[Dict] = None):
+    """Scalar-memory LSTM with exponential gating; lax.scan over seq."""
+    b, s, d = x.shape
+    xin = rmsnorm(x, p["ln"], cfg.norm_eps)
+    pre_x = jnp.einsum("bsd,dg->bsg", xin, p["wx"]).astype(jnp.float32)
+
+    def step(carry, xt):
+        h_prev, c_prev, n_prev = carry
+        pre = xt + h_prev @ p["wh"].astype(jnp.float32)
+        i, f, z, o = jnp.split(pre, 4, axis=-1)
+        i = jnp.exp(jnp.minimum(i, 8.0))
+        f = jax.nn.sigmoid(f)
+        c = f * c_prev + i * jnp.tanh(z)
+        n = f * n_prev + i
+        h = jax.nn.sigmoid(o) * c / jnp.maximum(n, 1.0)
+        return (h, c, n), h
+
+    if state is None:
+        h0 = jnp.zeros((b, d), jnp.float32)
+        init = (h0, h0, jnp.ones((b, d), jnp.float32))
+        (_, _, _), hs = jax.lax.scan(step, init,
+                                     jnp.moveaxis(pre_x, 1, 0))
+        y = jnp.moveaxis(hs, 0, 1)
+        new_state = None
+    else:
+        carry = (state["h"], state["c"], state["n"])
+        carry, h = step(carry, pre_x[:, 0])
+        y = h[:, None]
+        new_state = {"h": carry[0], "c": carry[1], "n": carry[2]}
+
+    # feature-wise normalization (GroupNorm analogue)
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    out = (y * jax.lax.rsqrt(var + 1e-6)).astype(x.dtype)
+    return x + out, new_state
+
+
+def init_xlstm_state(cfg: ArchConfig, kind: str, batch: int) -> Dict:
+    d = cfg.d_model
+    h, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    if kind == "mlstm":
+        return {"C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+                "n": jnp.zeros((batch, h, hd), jnp.float32)}
+    return {"h": jnp.zeros((batch, d), jnp.float32),
+            "c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.ones((batch, d), jnp.float32)}

@@ -1,0 +1,353 @@
+"""Model assembly: init, forward (scan-over-periods + remat), prefill,
+decode — for every family in the pool (dense / MoE / hybrid / ssm /
+enc-dec / frontend-stub multimodal).
+
+Each layer = mixer (attn | mamba | mlstm | slstm) + optional FFN
+(dense MLP | MoE). Layer parameters are stacked over period instances and
+scanned, so a 96-layer model lowers to one compact while-loop in HLO.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .common import (ArchConfig, KeyGen, _init, apply_attn, apply_mlp,
+                     cross_kv_from_encoder, init_attn, init_mlp,
+                     lm_head_loss, rmsnorm)
+
+TP_DEFAULT = 16  # production mesh model-axis size (vocab/expert padding)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ArchConfig, idx_in_period: int,
+                with_cross: bool) -> Tuple[Dict, Dict]:
+    kg = KeyGen(key)
+    kind = cfg.layer_kind(idx_in_period)
+    p: Dict = {}
+    s: Dict = {}
+    if kind == "attn":
+        p["attn"], s["attn"] = init_attn(kg, cfg)
+    elif kind == "mamba":
+        p["mamba"], s["mamba"] = ssm_mod.init_mamba(kg, cfg)
+    elif kind == "mlstm":
+        p["mlstm"], s["mlstm"] = ssm_mod.init_mlstm(kg, cfg)
+    elif kind == "slstm":
+        p["slstm"], s["slstm"] = ssm_mod.init_slstm(kg, cfg)
+    if with_cross:
+        p["cross"], s["cross"] = init_attn(kg, cfg)
+    if cfg.d_ff > 0 or cfg.layer_is_moe(idx_in_period):
+        if cfg.layer_is_moe(idx_in_period):
+            p["moe"], s["moe"] = moe_mod.init_moe(kg, cfg, TP_DEFAULT)
+        else:
+            p["mlp"], s["mlp"] = init_mlp(kg, cfg)
+    return p, s
+
+
+def _stack_specs(s: Dict) -> Dict:
+    return jax.tree.map(lambda spec: ("layers",) + spec, s,
+                        is_leaf=lambda x: isinstance(x, tuple)
+                        and all(isinstance(e, str) for e in x))
+
+
+def init_params(cfg: ArchConfig, key) -> Tuple[Dict, Dict]:
+    """Returns (params, specs). specs mirrors params with logical-axis
+    tuples on every leaf — the planner's input."""
+    kg = KeyGen(key)
+    vpad = cfg.padded_vocab(TP_DEFAULT)
+    params: Dict = {
+        # N(0, 1/d): unit-variance inputs after the sqrt(d) embed scaling
+        # and modest logits when tied as the unembedding.
+        "embed": _init(kg(), (vpad, cfg.d_model), cfg.dtype,
+                       scale=1.0 / math.sqrt(cfg.d_model)),
+        "final_ln": jnp.zeros((cfg.d_model,), cfg.dtype),
+    }
+    specs: Dict = {
+        "embed": ("vocab", "embed"),
+        "final_ln": ("embed",),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = _init(kg(), (vpad, cfg.d_model), cfg.dtype,
+                                  scale=1.0 / math.sqrt(cfg.d_model))
+        specs["unembed"] = ("vocab", "embed")
+
+    def stack_layers(idx: int, with_cross: bool):
+        keys = jax.random.split(kg(), cfg.n_periods)
+        p0, s0 = _init_layer(keys[0], cfg, idx, with_cross)
+        stacked = jax.vmap(
+            lambda k: _init_layer(k, cfg, idx, with_cross)[0])(keys)
+        return stacked, _stack_specs(s0)
+
+    blocks, bspecs = [], []
+    for i in range(cfg.period):
+        p, s = stack_layers(i, with_cross=cfg.is_encdec)
+        blocks.append(p)
+        bspecs.append(s)
+    params["blocks"] = blocks
+    specs["blocks"] = bspecs
+
+    if cfg.is_encdec:
+        enc_cfg = cfg
+        n_enc_periods = cfg.enc_layers
+        keys = jax.random.split(kg(), n_enc_periods)
+        p0, s0 = _init_layer(keys[0], cfg, 0, with_cross=False)
+        params["encoder"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, 0, False)[0])(keys)
+        specs["encoder"] = _stack_specs(s0)
+        params["enc_final_ln"] = jnp.zeros((cfg.d_model,), cfg.dtype)
+        specs["enc_final_ln"] = ("embed",)
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _apply_layer(p, x, cfg: ArchConfig, idx_in_period: int, *, positions,
+                 cache=None, enc_out=None):
+    kind = cfg.layer_kind(idx_in_period)
+    new_cache = None
+    if kind == "attn":
+        window = cfg.layer_window(idx_in_period)
+        x, new_cache = apply_attn(p["attn"], x, cfg, positions=positions,
+                                  window=window,
+                                  cache=None if cache is None
+                                  else cache.get("kv"))
+        new_cache = None if new_cache is None else {"kv": new_cache}
+    elif kind == "mamba":
+        x, st = ssm_mod.apply_mamba(p["mamba"], x, cfg,
+                                    None if cache is None
+                                    else cache.get("ssm"))
+        new_cache = None if st is None else {"ssm": st}
+    elif kind == "mlstm":
+        x, st = ssm_mod.apply_mlstm(p["mlstm"], x, cfg,
+                                    None if cache is None
+                                    else cache.get("ssm"))
+        new_cache = None if st is None else {"ssm": st}
+    elif kind == "slstm":
+        x, st = ssm_mod.apply_slstm(p["slstm"], x, cfg,
+                                    None if cache is None
+                                    else cache.get("ssm"))
+        new_cache = None if st is None else {"ssm": st}
+    if "cross" in p:
+        if enc_out is not None:
+            ckv = cross_kv_from_encoder(p["cross"], enc_out, cfg)
+        elif cache is not None and "cross_kv" in cache:
+            ckv = cache["cross_kv"]
+        else:
+            ckv = None
+        if ckv is not None:
+            x, _ = apply_attn(p["cross"], x, cfg, positions=positions,
+                              cross_kv=ckv)
+            if new_cache is not None:
+                new_cache["cross_kv"] = ckv
+    if "moe" in p:
+        x = moe_mod.apply_moe(p["moe"], x, cfg)
+    elif "mlp" in p:
+        x = apply_mlp(p["mlp"], x, cfg)
+    return x, new_cache
+
+
+def forward(params, x, cfg: ArchConfig, *, positions, caches=None,
+            enc_out=None):
+    """x: (B, S, D) embeddings. caches: list per idx_in_period of stacked
+    cache pytrees (leading dim n_periods) or None. Returns (x, caches)."""
+    blocks = params["blocks"]
+
+    def seq_constraint(x):
+        """Activation anchoring between layers: batch dim pinned to the
+        planner's choice (GSPMD propagation can drift to replication
+        inside scanned+remat'd bodies — a silent 16× compute waste), and
+        optionally seq→model (Megatron-SP analogue) so remat checkpoints
+        shard over the TP degree."""
+        want_seq = cfg.seq_shard and x.shape[1] % 16 == 0
+        if not want_seq and not cfg.act_batch_axes:
+            return x
+        try:
+            from jax.sharding import PartitionSpec as P_
+
+            b_spec = (tuple(cfg.act_batch_axes) if cfg.act_batch_axes
+                      else P_.UNCONSTRAINED)
+            s_spec = "model" if want_seq else P_.UNCONSTRAINED
+            if want_seq and cfg.act_batch_axes \
+                    and "model" in cfg.act_batch_axes:
+                s_spec = P_.UNCONSTRAINED
+            return jax.lax.with_sharding_constraint(
+                x, P_(b_spec, s_spec, P_.UNCONSTRAINED))
+        except Exception:
+            return x  # no mesh / axis missing: constraint is a no-op
+
+    def body(carry, xs):
+        x = carry
+        x = seq_constraint(x)
+        bp = xs[0]
+        cc = xs[1] if caches is not None else [None] * cfg.period
+        new_cc = []
+        for i in range(cfg.period):
+            x, nc = _apply_layer(bp[i], x, cfg, i, positions=positions,
+                                 cache=cc[i], enc_out=enc_out)
+            new_cc.append(nc)
+        x = seq_constraint(x)
+        if caches is not None:
+            return x, new_cc
+        return x, None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    elif cfg.remat == "dots":
+        # save matmul outputs: backward skips recompute (≈1 fewer
+        # all-gather wave of FSDP params) at ~2-3× checkpoint memory
+        body = jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    xs = (blocks,) if caches is None else (blocks, caches)
+    x, new_caches = jax.lax.scan(body, x, xs)
+    return x, new_caches
+
+
+def encode(params, src_embeds, cfg: ArchConfig):
+    """Encoder stack (non-causal attention) for enc-dec archs."""
+    enc = params["encoder"]
+    positions = jnp.arange(src_embeds.shape[1])
+
+    def body(x, bp):
+        h = rmsnorm(x, bp["attn"]["ln"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, bp["attn"]["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, bp["attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, bp["attn"]["wv"])
+        if cfg.qkv_bias:
+            q, k, v = q + bp["attn"]["bq"], k + bp["attn"]["bk"], \
+                v + bp["attn"]["bv"]
+        from .common import plain_attention, rope
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        out = plain_attention(q, k, v, causal=False)
+        x = x + jnp.einsum("bshk,hkd->bsd", out,
+                           bp["attn"]["wo"]).astype(x.dtype)
+        x = apply_mlp(bp["mlp"], x, cfg)
+        return x, None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, src_embeds, enc)
+    return rmsnorm(x, params["enc_final_ln"], cfg.norm_eps)
+
+
+def embed_tokens(params, tokens, cfg: ArchConfig):
+    return params["embed"][tokens] * jnp.asarray(
+        math.sqrt(cfg.d_model), cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Top-level steps (loss / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, batch, cfg: ArchConfig):
+    """batch: {'tokens' or 'embeds', 'labels', optional 'src_embeds'}."""
+    if cfg.embeds_input and "embeds" in batch:
+        x = batch["embeds"].astype(cfg.dtype)
+    else:
+        x = embed_tokens(params, batch["tokens"], cfg)
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = encode(params, batch["src_embeds"].astype(cfg.dtype),
+                         cfg)
+    positions = jnp.arange(x.shape[1])
+    x, _ = forward(params, x, cfg, positions=positions, enc_out=enc_out)
+    return lm_head_loss(params, x, batch["labels"], cfg,
+                        cfg.padded_vocab(TP_DEFAULT))
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_seq: int,
+                cross_len: int = 0, uniform_index: bool = False):
+    """Stacked decode caches: list per idx_in_period. ``cross_len`` > 0
+    adds encoder cross-KV slots (enc-dec decode entry point).
+    ``uniform_index`` → scalar per-layer position (steady-state decode;
+    cheap DUS updates) instead of per-slot positions (continuous
+    batching)."""
+    caches = []
+    for i in range(cfg.period):
+        kind = cfg.layer_kind(i)
+        if kind == "attn":
+            shape = (cfg.n_periods, batch, max_seq, cfg.kv_heads,
+                     cfg.head_dim)
+            idx_shape = (cfg.n_periods,) if uniform_index \
+                else (cfg.n_periods, batch)
+            c = {"kv": {"k": jnp.zeros(shape, cfg.dtype),
+                        "v": jnp.zeros(shape, cfg.dtype),
+                        "index": jnp.zeros(idx_shape, jnp.int32)}}
+        else:
+            if kind == "mamba":
+                st = ssm_mod.init_mamba_state(cfg, batch)
+            else:
+                st = ssm_mod.init_xlstm_state(cfg, kind, batch)
+            c = {"ssm": jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a[None], (cfg.n_periods,) + a.shape), st)}
+        if cfg.is_encdec and cross_len > 0:
+            c["cross_kv"] = (
+                jnp.zeros((cfg.n_periods, batch, cross_len, cfg.kv_heads,
+                           cfg.head_dim), cfg.dtype),
+                jnp.zeros((cfg.n_periods, batch, cross_len, cfg.kv_heads,
+                           cfg.head_dim), cfg.dtype))
+        caches.append(c)
+    return caches
+
+
+def prefill(params, batch, cfg: ArchConfig, max_seq: int):
+    """Run the prompt through the model, filling caches.
+    Returns (caches, last_token_logits)."""
+    if cfg.embeds_input and "embeds" in batch:
+        x = batch["embeds"].astype(cfg.dtype)
+    else:
+        x = embed_tokens(params, batch["tokens"], cfg)
+    b, s = x.shape[0], x.shape[1]
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = encode(params, batch["src_embeds"].astype(cfg.dtype),
+                         cfg)
+    caches = init_caches(cfg, b, max_seq)
+    positions = jnp.arange(s)
+    x, caches = forward(params, x, cfg, positions=positions,
+                        caches=caches, enc_out=enc_out)
+    x = rmsnorm(x[:, -1:], params["final_ln"], cfg.norm_eps)
+    w = params.get("unembed", params["embed"])
+    from .common import mask_padded_vocab
+    logits = mask_padded_vocab(jnp.einsum("btd,vd->btv", x, w),
+                               cfg.vocab)[:, 0]
+    return caches, logits
+
+
+def decode_step(params, tokens, caches, cfg: ArchConfig, *, enc_out=None):
+    """One decode step. tokens: (B, 1) int32. Returns (logits, caches)."""
+    x = embed_tokens(params, tokens, cfg)
+    # position from any attention cache index (all layers share it)
+    pos0 = None
+    for c in caches:
+        if c is not None and "kv" in c:
+            pos0 = c["kv"]["index"][0]
+            break
+    if pos0 is None:
+        pos0 = jnp.zeros((x.shape[0],), jnp.int32)
+    if pos0.ndim == 0:  # uniform decode position
+        positions = pos0 + jnp.arange(x.shape[1])
+    else:
+        positions = pos0[:, None] + jnp.arange(x.shape[1])[None, :]
+    x, caches = forward(params, x, cfg, positions=positions,
+                        caches=caches, enc_out=enc_out)
+    x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    w = params.get("unembed", params["embed"])
+    from .common import mask_padded_vocab, softcap
+    logits = jnp.einsum("btd,vd->btv", x, w)
+    logits = mask_padded_vocab(softcap(logits, cfg.logit_softcap),
+                               cfg.vocab)[:, 0]
+    return logits, caches

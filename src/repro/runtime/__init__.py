@@ -1,0 +1,20 @@
+"""raylite — the Ray-analogue distributed runtime (paper §2.2).
+
+Public API mirrors the Ray calls the paper's generated code uses:
+
+    from repro.runtime import TaskRuntime
+    rt = TaskRuntime(workers=8)
+    ref = rt.submit(fn, *args)      # ray.remote(fn).remote(*args)
+    rt.get(ref)                     # ray.get
+    rt.wait(refs, num_returns=1)    # ray.wait
+"""
+
+from .elastic import ElasticController, ElasticPolicy
+from .lineage import LineageGraph
+from .store import ObjectLostError, ObjectRef, ObjectStore
+from .tasks import TaskFailedError, TaskRuntime
+
+__all__ = [
+    "ElasticController", "ElasticPolicy", "LineageGraph", "ObjectLostError",
+    "ObjectRef", "ObjectStore", "TaskFailedError", "TaskRuntime",
+]

@@ -1,0 +1,63 @@
+"""Elastic autoscaling policy for the raylite worker pool.
+
+Watches queue depth and completed-task latency and resizes the pool within
+[min_workers, max_workers]. On real clusters this is the autoscaler
+requesting/releasing nodes; here it exercises the same control loop against
+the thread-backed pool so elasticity is a tested property of the runtime,
+not an aspiration.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Optional
+
+from .tasks import TaskRuntime
+
+
+@dataclass
+class ElasticPolicy:
+    min_workers: int = 1
+    max_workers: int = 16
+    scale_up_queue_per_worker: float = 2.0   # queue/worker above → grow
+    scale_down_idle_queue: int = 0           # queue at/below → shrink
+    step: int = 2
+
+
+class ElasticController:
+    def __init__(self, rt: TaskRuntime, policy: ElasticPolicy = None,
+                 interval_s: float = 0.05):
+        self.rt = rt
+        self.policy = policy or ElasticPolicy()
+        self.interval_s = interval_s
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.decisions: list = []
+
+    def tick(self) -> int:
+        """One control-loop step; returns the new target size."""
+        p = self.policy
+        size = max(1, self.rt.pool.size)
+        depth = self.rt.pool.queue_depth()
+        target = size
+        if depth > p.scale_up_queue_per_worker * size:
+            target = min(p.max_workers, size + p.step)
+        elif depth <= p.scale_down_idle_queue and size > p.min_workers:
+            target = max(p.min_workers, size - 1)
+        if target != size:
+            self.rt.scale_to(target)
+            self.decisions.append((size, target, depth))
+        return target
+
+    def start(self) -> None:
+        def loop():
+            while not self._stop.wait(self.interval_s):
+                self.tick()
+
+        self._thread = threading.Thread(target=loop, daemon=True,
+                                        name="raylite-elastic")
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()

@@ -1,0 +1,70 @@
+"""Lineage-based fault tolerance (paper §2.2, after Lineage Stash [22]).
+
+"Data store immutability, combined with the deterministic nature of the
+task graph, enable fault tolerance, as any missing object in the graph can
+be recomputed by simply replaying the sub-graph leading up to and including
+the object's parent vertex."
+
+The lineage graph maps every ObjectRef to the (pure, deterministic) task
+that produced it; ``reconstruct`` replays the minimal sub-graph for a lost
+object, re-fetching transitively-lost inputs first.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Tuple
+
+from .store import ObjectLostError, ObjectRef, ObjectStore
+
+
+@dataclass
+class TaskRecord:
+    task_id: int
+    fn: Callable
+    args: Tuple[Any, ...]        # values or ObjectRefs
+    kwargs: Dict[str, Any]
+    out_refs: Tuple[ObjectRef, ...]
+
+
+class LineageGraph:
+    def __init__(self, store: ObjectStore):
+        self.store = store
+        self._by_task: Dict[int, TaskRecord] = {}
+        self._producer: Dict[int, int] = {}  # object id → task id
+        self._lock = threading.Lock()
+        self.replays = 0
+
+    def record(self, rec: TaskRecord) -> None:
+        with self._lock:
+            self._by_task[rec.task_id] = rec
+            for ref in rec.out_refs:
+                self._producer[ref.id] = rec.task_id
+
+    def producer_of(self, ref: ObjectRef):
+        with self._lock:
+            tid = self._producer.get(ref.id)
+            return self._by_task.get(tid) if tid is not None else None
+
+    # -- recovery -----------------------------------------------------------
+    def reconstruct(self, ref: ObjectRef) -> Any:
+        """Return the object's value, replaying producers as needed."""
+        if self.store.available(ref):
+            return self.store.get_local(ref)
+        rec = self.producer_of(ref)
+        if rec is None:
+            raise ObjectLostError(
+                f"{ref} lost and has no lineage (direct put?)")
+        args = [self.reconstruct(a) if isinstance(a, ObjectRef) else a
+                for a in rec.args]
+        kwargs = {k: (self.reconstruct(v) if isinstance(v, ObjectRef)
+                      else v)
+                  for k, v in rec.kwargs.items()}
+        with self._lock:
+            self.replays += 1
+        result = rec.fn(*args, **kwargs)
+        outs = result if len(rec.out_refs) > 1 else (result,)
+        for r, v in zip(rec.out_refs, outs):
+            self.store.fulfill(r, v)
+        return self.store.get_local(ref)

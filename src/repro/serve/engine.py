@@ -1,0 +1,124 @@
+"""Batched serving engine with continuous batching.
+
+Requests are admitted into free cache slots (prefill), then all active
+slots advance together through one jit'd batched decode step per tick —
+new requests join between ticks without recompilation (static shapes).
+Greedy sampling; per-request max_tokens / eos termination.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.common import ArchConfig
+
+from .kvcache import SlotMap
+
+
+@dataclass
+class Request:
+    request_id: str
+    prompt: np.ndarray                  # (S,) int32
+    max_tokens: int = 16
+    eos_id: Optional[int] = None
+    generated: List[int] = field(default_factory=list)
+    slot: Optional[int] = None
+    submitted_s: float = field(default_factory=time.perf_counter)
+    first_token_s: Optional[float] = None
+    finished_s: Optional[float] = None
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ArchConfig, *, n_slots: int = 4,
+                 max_seq: int = 256):
+        self.params = params
+        self.cfg = cfg
+        self.max_seq = max_seq
+        self.slots = SlotMap(n_slots)
+        self.caches = T.init_caches(cfg, n_slots, max_seq)
+        self.queue: List[Request] = []
+        self.active: Dict[int, Request] = {}
+        self.finished: List[Request] = []
+
+        def _prefill(params, tokens):
+            return T.prefill(params, {"tokens": tokens}, cfg, max_seq)
+
+        def _decode(params, tokens, caches):
+            return T.decode_step(params, tokens, caches, cfg)
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode)
+        self._insert = jax.jit(self._insert_impl)
+
+    @staticmethod
+    def _insert_impl(caches, one, slot):
+        """Write a batch-1 cache into batched caches at `slot`."""
+        def ins(big, small):
+            return jax.lax.dynamic_update_slice_in_dim(
+                big, small.astype(big.dtype), slot, axis=1)
+
+        return jax.tree.map(ins, caches, one)
+
+    # -- API ----------------------------------------------------------------
+    def add_request(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        while self.queue:
+            slot = self.slots.allocate(self.queue[0].request_id)
+            if slot is None:
+                return
+            req = self.queue.pop(0)
+            req.slot = slot
+            tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+            one_cache, logits = self._prefill(self.params, tokens)
+            tok = int(jnp.argmax(logits[0]))
+            req.generated.append(tok)
+            req.first_token_s = time.perf_counter()
+            self.caches = self._insert(self.caches, one_cache,
+                                       jnp.int32(slot))
+            self.slots.lengths[slot] = len(req.prompt) + 1
+            self.active[slot] = req
+
+    def step(self) -> int:
+        """One engine tick: admit + one batched decode. Returns number of
+        active requests after the tick."""
+        self._admit()
+        if not self.active:
+            return 0
+        n_slots = self.slots.n_slots
+        tokens = np.zeros((n_slots, 1), np.int32)
+        for slot, req in self.active.items():
+            tokens[slot, 0] = req.generated[-1]
+        logits, self.caches = self._decode(self.params,
+                                           jnp.asarray(tokens),
+                                           self.caches)
+        next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
+        done_slots = []
+        for slot, req in self.active.items():
+            tok = int(next_tokens[slot])
+            req.generated.append(tok)
+            self.slots.advance(slot)
+            if (len(req.generated) >= req.max_tokens
+                    or (req.eos_id is not None and tok == req.eos_id)
+                    or self.slots.lengths[slot] >= self.max_seq - 1):
+                req.finished_s = time.perf_counter()
+                done_slots.append(slot)
+        for slot in done_slots:
+            self.finished.append(self.active.pop(slot))
+            self.slots.free(slot)
+        return len(self.active)
+
+    def run_until_done(self, max_ticks: int = 10_000) -> List[Request]:
+        for _ in range(max_ticks):
+            if not self.queue and not self.active:
+                break
+            self.step()
+        return self.finished

@@ -1,0 +1,5 @@
+from .optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
+from .train_loop import make_init, make_loss_fn, make_train_step
+
+__all__ = ["AdamWConfig", "OptState", "adamw_update", "init_opt_state",
+           "make_init", "make_loss_fn", "make_train_step"]

@@ -1,0 +1,98 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+Two schemes, selectable per config (a profitability decision on the
+collective roofline term):
+
+  * ``int8``  — stochastic-rounding int8 with per-leaf absmax scale:
+    4× less DP all-reduce traffic than fp32, 2× less than bf16. The
+    all-reduce runs over the *decoded* values (psum of int8 is lossy
+    across shards), so the win is realized by casting before the
+    cross-replica reduce and decoding after — here expressed as
+    compress → psum(fp32 of int8) → decode.
+  * ``topk``  — magnitude top-k sparsification with error feedback; the
+    residual is carried to the next step (classic deep-gradient-
+    compression). Used by the hillclimb when the collective term
+    dominates and the topology makes all-gather-of-sparse cheaper.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressedGrad(NamedTuple):
+    payload: jnp.ndarray
+    scale: jnp.ndarray
+
+
+def compress_int8(g: jnp.ndarray, key=None) -> CompressedGrad:
+    g32 = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    x = g32 / scale
+    if key is not None:  # stochastic rounding
+        x = jnp.floor(x + jax.random.uniform(key, x.shape))
+    else:
+        x = jnp.round(x)
+    q = jnp.clip(x, -127, 127).astype(jnp.int8)
+    return CompressedGrad(q, scale.astype(jnp.float32))
+
+
+def decompress_int8(c: CompressedGrad) -> jnp.ndarray:
+    return c.payload.astype(jnp.float32) * c.scale
+
+
+def compress_tree_int8(grads, key=None):
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = (jax.random.split(key, len(leaves)) if key is not None
+            else [None] * len(leaves))
+    out = [compress_int8(g, k) for g, k in zip(leaves, keys)]
+    return treedef.unflatten(out)
+
+
+def decompress_tree_int8(ctree):
+    return jax.tree.map(decompress_int8, ctree,
+                        is_leaf=lambda x: isinstance(x, CompressedGrad))
+
+
+def roundtrip_int8(grads, key=None):
+    """compress→decompress (what each DP replica sends/receives)."""
+    return decompress_tree_int8(compress_tree_int8(grads, key))
+
+
+# ---------------------------------------------------------------------------
+# top-k with error feedback
+# ---------------------------------------------------------------------------
+
+class TopKState(NamedTuple):
+    residual: Any  # pytree of fp32 residuals
+
+
+def init_topk_state(grads) -> TopKState:
+    return TopKState(jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads))
+
+
+def topk_sparsify(g: jnp.ndarray, res: jnp.ndarray,
+                  frac: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    g32 = g.astype(jnp.float32) + res
+    flat = g32.reshape(-1)
+    k = max(1, int(flat.size * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = jnp.abs(g32) >= thresh
+    sent = jnp.where(mask, g32, 0.0)
+    new_res = g32 - sent
+    return sent, new_res
+
+
+def topk_roundtrip(grads, state: TopKState,
+                   frac: float = 0.05) -> Tuple[Any, TopKState]:
+    outs = jax.tree.map(
+        lambda g, r: topk_sparsify(g, r, frac), grads, state.residual)
+    sent = jax.tree.map(lambda o: o[0], outs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda o: o[1], outs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return sent, TopKState(res)

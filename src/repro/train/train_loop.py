@@ -1,0 +1,90 @@
+"""Training step factory: grad accumulation, remat, compression, optimizer.
+
+``make_train_step(cfg)`` returns a pure function
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+
+with the global batch split into ``cfg.microbatch`` accumulation steps
+scanned sequentially (the memory roofline term decides the count), loss
+rematerialized per microbatch, optional int8 gradient compression at the
+accumulate boundary (the DP all-reduce surrogate point under GSPMD), and
+AdamW (optionally 8-bit states) applied once.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.common import ArchConfig
+
+from . import grad_compress
+from .optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
+
+
+def _split_microbatches(batch: Dict, n: int) -> Dict:
+    """(B, …) → (n, B/n, …) for every leaf."""
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, f"global batch {b} not divisible by {n}"
+        return x.reshape(n, b // n, *x.shape[1:])
+
+    return jax.tree.map(split, batch)
+
+
+def make_loss_fn(cfg: ArchConfig):
+    def loss_fn(params, microbatch):
+        return T.loss_fn(params, microbatch, cfg)
+
+    return loss_fn
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: Optional[AdamWConfig] = None,
+                    compress: Optional[str] = None):
+    opt_cfg = opt_cfg or AdamWConfig(quantize_moments=cfg.opt_8bit)
+    loss_fn = make_loss_fn(cfg)
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def train_step(params, opt_state: OptState, batch):
+        n = max(1, cfg.microbatch)
+        mbs = _split_microbatches(batch, n)
+
+        def accum(carry, mb):
+            gsum, lsum = carry
+            loss, grads = grad_fn(params, mb)
+            gsum = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+            return (gsum, lsum + loss), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                          params)
+        (gsum, lsum), _ = jax.lax.scan(accum, (g0, jnp.float32(0.0)), mbs)
+        grads = jax.tree.map(lambda g: g / n, gsum)
+        if compress == "int8":
+            grads = grad_compress.roundtrip_int8(grads)
+        new_params, new_opt = adamw_update(params, grads, opt_state,
+                                           opt_cfg)
+        metrics = {
+            "loss": lsum / n,
+            "grad_norm": jnp.sqrt(sum(
+                jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads))),
+            "step": new_opt.step,
+        }
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_init(cfg: ArchConfig, opt_cfg: Optional[AdamWConfig] = None):
+    opt_cfg = opt_cfg or AdamWConfig(quantize_moments=cfg.opt_8bit)
+
+    def init(key):
+        params, specs = T.init_params(cfg, key)
+        opt_state = init_opt_state(params, opt_cfg)
+        return params, opt_state, specs
+
+    return init

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# Tests see the real single CPU device (the 512-device override is local
+# to launch/dryrun.py, per the multi-pod dry-run contract).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

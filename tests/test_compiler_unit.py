@@ -1,0 +1,136 @@
+"""Compiler unit tests: parser, types, SCoP, dependence, scheduling."""
+
+import numpy as np
+import pytest
+
+from repro.core import dependence, parser, schedule, scop
+from repro.core.isl_lite import Affine, LoopDim
+from repro.core.types import TypeInfo, matches, parse_annotation, \
+    runtime_typeinfo
+
+
+def test_parse_annotation_forms():
+    assert parse_annotation("ndarray[f64,2]").rank == 2
+    assert parse_annotation("list[f32,1]").kind == "list"
+    assert parse_annotation(float).dtype == "float64"
+    assert parse_annotation(int).dtype == "int64"
+    assert parse_annotation("'ndarray[f64,2]'").rank == 2  # double-quoted
+
+
+def test_runtime_typeinfo_and_matches():
+    hint = parse_annotation("ndarray[f64,2]")
+    assert matches(hint, runtime_typeinfo(np.zeros((3, 3))))
+    assert not matches(hint, runtime_typeinfo(np.zeros(3)))
+    assert not matches(hint, runtime_typeinfo(np.zeros((3, 3),
+                                                       np.float32)))
+    assert matches(parse_annotation("list[f64,2]"),
+                   runtime_typeinfo([[1.0, 2.0]]))
+
+
+def test_parser_black_box_degrades():
+    def weird(a: "ndarray[f64,1]", N: int):
+        a[0] = 1.0
+        while N > 0:       # unsupported → black-box
+            N -= 1
+        a[1] = 2.0
+
+    fn = parser.parse_function(weird)
+    prog = scop.extract(fn)
+    kinds = [type(i).__name__ for i in prog.items]
+    assert "OpaqueItem" in kinds
+    assert kinds.count("CanonStmt") == 2  # analysis continues around it
+
+
+def test_loop_parallel_detection():
+    def par(a: "ndarray[f64,2]", b: "ndarray[f64,2]", N: int):
+        for i in range(0, N):
+            a[i, :] = b[i, :] * 2.0
+
+    def seq(a: "ndarray[f64,1]", N: int):
+        for i in range(1, N):
+            a[i] = a[i - 1] * 2.0
+
+    for f, expect in ((par, True), (seq, False)):
+        fn = parser.parse_function(f)
+        prog = scop.extract(fn)
+        loops = [i for i in prog.items if isinstance(i, scop.LoopItem)]
+        if not loops:
+            # absorbed = was parallel & fully analyzable
+            assert expect
+            continue
+        got = dependence.loop_parallel(loops[0],
+                                       [n for n, _ in fn.params])
+        assert got == expect, f.__name__
+
+
+def test_accumulation_legal():
+    k = LoopDim("k", Affine.constant(0), Affine.var("N"))
+    stmt = scop.CanonStmt(
+        write_array="c",
+        write_idx=(Affine.var("i"),),
+        domain=scop.Domain((LoopDim("i", Affine.constant(0),
+                                    Affine.var("N")),)),
+        rhs=scop.VBin("*", scop.VAccess("a", (Affine.var("i"),
+                                              Affine.var("k"))),
+                      scop.VAccess("x", (Affine.var("k"),))),
+        aug="+")
+    assert dependence.accumulation_legal(stmt, [k])
+    # reading the target at a shifted index kills it
+    stmt2 = scop.CanonStmt(
+        write_array="c", write_idx=(Affine.var("i"),),
+        domain=stmt.domain,
+        rhs=scop.VAccess("c", (Affine.var("i") + 1,)), aug="+")
+    assert not dependence.accumulation_legal(stmt2, [k])
+
+
+def test_distribution_illegal_on_backward_dep():
+    # S1 reads a[i+1]; S2 writes a[i] → distributing S1 before all S2
+    # iterations would read overwritten values
+    i = LoopDim("i", Affine.constant(0), Affine.var("N"))
+    s1 = scop.CanonStmt(
+        write_array="b", write_idx=(Affine.var("i"),),
+        domain=scop.Domain((i,)),
+        rhs=scop.VAccess("a", (Affine.var("i") + 1,)))
+    s2 = scop.CanonStmt(
+        write_array="a", write_idx=(Affine.var("i"),),
+        domain=scop.Domain((i,)),
+        rhs=scop.VConst(1.0))
+    assert not dependence.distribution_legal([s1, s2], ["i"])
+    # same-iteration flow only → legal
+    s3 = scop.CanonStmt(
+        write_array="b", write_idx=(Affine.var("i"),),
+        domain=scop.Domain((i,)),
+        rhs=scop.VAccess("a", (Affine.var("i"),)))
+    assert dependence.distribution_legal([s2, s3], ["i"])
+
+
+def test_schedule_absorbs_matmul_loops():
+    def mm(C: "ndarray[f64,2]", A: "ndarray[f64,2]", B: "ndarray[f64,2]",
+           N: int):
+        for i in range(0, N):
+            for j in range(0, N):
+                C[i][j] = 0.0
+                for k in range(0, N):
+                    C[i][j] += A[i][k] * B[k][j]
+
+    fn = parser.parse_function(mm)
+    sched = schedule.schedule(scop.extract(fn))
+    # fully absorbed: no residual loops
+    assert not any(isinstance(u, schedule.SeqLoopUnit) for u in
+                   sched.units)
+    assert len([u for u in sched.units
+                if isinstance(u, schedule.RaisedUnit)]) == 2
+
+
+def test_fft_is_materialization_point():
+    def pipeline(x: "ndarray[c128,2]", out: "ndarray[c128,2]", N: int,
+                 F: int):
+        for i in range(0, N):
+            row = np.fft.fft(x[i, :], F)
+            out[i, 0:F] = row * 2.0
+
+    fn = parser.parse_function(pipeline)
+    sched = schedule.schedule(scop.extract(fn))
+    # loop kept (fft blocks absorption) and distributable
+    assert sched.has_pfor or any(
+        isinstance(u, schedule.SeqLoopUnit) for u in sched.units)

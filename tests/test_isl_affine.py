@@ -1,0 +1,96 @@
+"""Unit + property tests for the integer-affine core (isl_lite)."""
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.isl_lite import (Affine, Domain, LoopDim,
+                                 affine_eq_may_hold, banerjee_test,
+                                 gcd_test)
+
+names = st.sampled_from(["i", "j", "k", "M", "N"])
+coeffs = st.integers(-5, 5)
+
+
+@st.composite
+def affines(draw):
+    n = draw(st.integers(0, 3))
+    a = Affine.constant(draw(st.integers(-10, 10)))
+    for _ in range(n):
+        a = a + Affine.var(draw(names), draw(coeffs))
+    return a
+
+
+@given(affines(), affines())
+@settings(max_examples=200, deadline=None)
+def test_add_commutes(a, b):
+    assert (a + b).equals(b + a)
+
+
+@given(affines(), affines(), affines())
+@settings(max_examples=100, deadline=None)
+def test_add_associates(a, b, c):
+    assert ((a + b) + c).equals(a + (b + c))
+
+
+@given(affines())
+@settings(max_examples=100, deadline=None)
+def test_sub_self_zero(a):
+    assert (a - a).is_zero()
+
+
+@given(affines(), st.integers(-4, 4))
+@settings(max_examples=100, deadline=None)
+def test_scale_distributes(a, c):
+    assert (a * c + a * (-c)).is_zero()
+
+
+@given(affines(), st.dictionaries(names, st.integers(-20, 20),
+                                  min_size=5, max_size=5))
+@settings(max_examples=200, deadline=None)
+def test_evaluate_homomorphic(a, env):
+    b = a + Affine.var("i", 2)
+    assert b.evaluate(env) == a.evaluate(env) + 2 * env["i"]
+
+
+def test_gcd_test():
+    # 2x + 4y = 3 has no integer solution
+    assert not gcd_test([2, 4], 3)
+    assert gcd_test([2, 4], 6)
+    assert gcd_test([], 0)
+    assert not gcd_test([], 1)
+
+
+def test_banerjee_interval():
+    # x - y = 100 with x,y in [0, 9]: impossible
+    assert not banerjee_test([1, -1], -100, [(0, 9), (0, 9)])
+    assert banerjee_test([1, -1], -5, [(0, 9), (0, 9)])
+
+
+def test_affine_eq_may_hold_disjoint():
+    i, j = Affine.var("i"), Affine.var("j")
+    # i == j + 100 with both in [0, 9]: never
+    assert not affine_eq_may_hold(i, j + 100,
+                                  {"i": (0, 9), "j": (0, 9)})
+    assert affine_eq_may_hold(i, j, {"i": (0, 9), "j": (0, 9)})
+
+
+def test_domain_cardinality_triangular():
+    M = 7
+    dom = Domain((
+        LoopDim("i", Affine.constant(0), Affine.constant(M)),
+        LoopDim("j", Affine.var("i") + 1, Affine.constant(M)),
+    ))
+    # sum_{i<M} (M - i - 1) = M(M-1)/2
+    assert dom.cardinality({}) == M * (M - 1) // 2
+
+
+def test_domain_rectangular_flag():
+    d1 = Domain((LoopDim("i", Affine.constant(0), Affine.var("M")),))
+    assert d1.is_rectangular()
+    d2 = Domain((
+        LoopDim("i", Affine.constant(0), Affine.var("M")),
+        LoopDim("j", Affine.var("i"), Affine.var("M")),
+    ))
+    assert not d2.is_rectangular()
+    assert d2.triangular_pairs() == [("i", "j", 0)]

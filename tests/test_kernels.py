@@ -1,0 +1,132 @@
+"""Pallas kernel parity: interpret-mode kernels vs pure-jnp oracles,
+with hypothesis shape/dtype sweeps."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.matmul.ops import matmul
+from repro.kernels.matmul.ref import matmul_ref
+from repro.kernels.mamba_scan.ops import mamba_scan
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@given(
+    m=st.sampled_from([16, 64, 100, 128]),
+    k=st.sampled_from([32, 128, 300]),
+    n=st.sampled_from([16, 64, 200]),
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+)
+@settings(max_examples=12, deadline=None)
+def test_matmul_sweep(m, k, n, dtype):
+    rng = np.random.default_rng(m * 1000 + k * 10 + n)
+    x = jnp.asarray(rng.normal(size=(m, k)), dtype)
+    y = jnp.asarray(rng.normal(size=(k, n)), dtype)
+    got = matmul(x, y, force_pallas=True, interpret=True,
+                 bm=32, bn=32, bk=64)
+    ref = matmul_ref(x, y)
+    tol = 2e-2 if dtype == "bfloat16" else 2e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@given(
+    sq=st.sampled_from([64, 128]),
+    h=st.sampled_from([2, 4]),
+    kvh=st.sampled_from([1, 2]),
+    d=st.sampled_from([32, 64]),
+    window=st.sampled_from([0, 32]),
+    softcap=st.sampled_from([0.0, 30.0]),
+)
+@settings(max_examples=10, deadline=None)
+def test_flash_attention_sweep(sq, h, kvh, d, window, softcap):
+    if h % kvh:
+        kvh = 1
+    rng = np.random.default_rng(sq + h * 7 + d)
+    q = jnp.asarray(rng.normal(size=(1, sq, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, sq, kvh, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, sq, kvh, d)), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          softcap=softcap, force_pallas=True,
+                          interpret=True, bq=32, bk=32)
+    ref = attention_ref(q, k, v, causal=True, window=window,
+                        softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_matches_model_chunked_path():
+    """The model's chunked_attention and the Pallas kernel agree."""
+    from repro.models.common import chunked_attention
+
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(2, 128, 4, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 128, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 128, 2, 32)), jnp.float32)
+    a = chunked_attention(q, k, v, causal=True, chunk=32)
+    b = flash_attention(q, k, v, causal=True, force_pallas=True,
+                        interpret=True, bq=32, bk=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5,
+                               rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# mamba scan
+# ---------------------------------------------------------------------------
+
+@given(
+    l=st.sampled_from([32, 64]),
+    inner=st.sampled_from([8, 16]),
+    n=st.sampled_from([4, 8]),
+    chunk=st.sampled_from([8, 16]),
+)
+@settings(max_examples=8, deadline=None)
+def test_mamba_scan_sweep(l, inner, n, chunk):
+    rng = np.random.default_rng(l + inner + n)
+    B = 2
+    x = jnp.asarray(rng.normal(size=(B, l, inner)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.normal(size=(B, l, inner))) * 0.1,
+                     jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, l, n)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(B, l, n)), jnp.float32)
+    a = jnp.asarray(np.log(np.abs(rng.normal(size=(inner, n))) + 0.5),
+                    jnp.float32)
+    d = jnp.asarray(rng.normal(size=(inner,)), jnp.float32)
+    got = mamba_scan(x, dt, Bm, Cm, a, d, chunk=chunk,
+                     force_pallas=True, interpret=True)
+    ref = mamba_scan_ref(x, dt, Bm, Cm, a, d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_mamba_scan_chunking_invariance():
+    """Chunk size must not change results (state carried across chunks)."""
+    rng = np.random.default_rng(9)
+    B, L, I, N = 1, 48, 8, 4
+    x = jnp.asarray(rng.normal(size=(B, L, I)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.normal(size=(B, L, I))) * 0.1,
+                     jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, L, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(B, L, N)), jnp.float32)
+    a = jnp.asarray(np.log(np.abs(rng.normal(size=(I, N))) + 0.5),
+                    jnp.float32)
+    d = jnp.asarray(rng.normal(size=(I,)), jnp.float32)
+    o1 = mamba_scan(x, dt, Bm, Cm, a, d, chunk=8, force_pallas=True,
+                    interpret=True)
+    o2 = mamba_scan(x, dt, Bm, Cm, a, d, chunk=16, force_pallas=True,
+                    interpret=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)

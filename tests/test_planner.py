@@ -1,0 +1,121 @@
+"""Planner tests: legality fallbacks, strategy selection, microbatch
+adaptation — the multi-versioning decision tree at LM scale."""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core import planner as PL
+from repro.models import transformer as T
+
+
+def _mesh22():
+    n = len(jax.devices())
+    return jax.make_mesh((1, 1), ("data", "model")) if n == 1 else \
+        jax.make_mesh((n // 2, 2), ("data", "model"))
+
+
+def test_resolve_leaf_divisible():
+    mesh = _mesh22()
+    st = [s for s in PL.make_strategies(mesh) if s.name == "fsdp_tp"][0]
+    spec = PL.resolve_leaf_spec((64, 16, 8), ("embed", "heads",
+                                              "head_dim"), st, mesh)
+    assert spec[1] == "model" or spec == P(None, None, None) \
+        or spec[0] is not None
+
+
+def test_resolve_leaf_indivisible_falls_back():
+    """gemma2 pattern: heads=3 indivisible by model → try head_dim."""
+    mesh = _mesh22()
+    if mesh.shape["model"] == 1:
+        pytest.skip("single device")
+    st = [s for s in PL.make_strategies(mesh) if s.name == "fsdp_tp"][0]
+    spec = PL.resolve_leaf_spec((64, 3, 8), ("embed", "heads",
+                                             "head_dim"), st, mesh)
+    # heads (3) not divisible by 2 → head_dim picks up the model axis
+    assert spec[1] is None
+    assert spec[2] == "model"
+
+
+def test_mesh_axis_used_once_per_leaf():
+    mesh = _mesh22()
+    st = [s for s in PL.make_strategies(mesh) if s.name == "fsdp_tp"][0]
+    spec = PL.resolve_leaf_spec((64, 16, 16, 8),
+                                ("embed", "heads", "kv_heads",
+                                 "head_dim"), st, mesh)
+    used = []
+    for part in spec:
+        if part is None:
+            continue
+        parts = part if isinstance(part, tuple) else (part,)
+        used.extend(parts)
+    assert len(used) == len(set(used)), spec
+
+
+def test_effective_dp_replication_guard():
+    mesh = _mesh22()
+    axes = tuple(mesh.axis_names)
+    total = mesh.size
+    assert PL.effective_dp(mesh, axes, total) == total
+    assert PL.effective_dp(mesh, axes, 1) == 1
+
+
+def test_adapt_microbatch_prefers_full_dp():
+    mesh = _mesh22()
+    cfg = get_config("stablelm_3b")  # cfg.microbatch = 2
+    mb, eff = PL.adapt_microbatch(cfg, 256, mesh, tuple(mesh.axis_names))
+    assert 256 % mb == 0
+    assert (256 // mb) % eff == 0
+    assert eff == mesh.size  # always achievable at batch 256
+
+
+def test_plan_picks_legal_strategy_small():
+    mesh = _mesh22()
+    cfg = get_config("xlstm_125m")
+    p_shapes = jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.key(0))[0])
+    holder = {}
+
+    def cap():
+        params, specs = T.init_params(cfg, jax.random.key(0))
+        holder["s"] = specs
+        return params
+
+    jax.eval_shape(cap)
+    plan = PL.plan(cfg, holder["s"], p_shapes, mesh, seq=128, batch=8,
+                   kind="train")
+    assert plan.estimate.legal or plan.strategy.name == "dp"
+    # shardings tree mirrors params tree
+    n_shard = len(jax.tree.leaves(plan.param_shardings))
+    n_param = len(jax.tree.leaves(p_shapes))
+    assert n_shard == n_param
+
+
+def test_estimate_memory_legality_340b():
+    """fp32 Adam for nemotron-340B must be illegal on a 256-chip pod;
+    the 8-bit variant fits (DESIGN.md §5)."""
+    import dataclasses
+
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = np.array(jax.devices()).reshape(1, 1)
+    mesh = Mesh(devs, ("data", "model"))
+
+    # emulate pod-scale arithmetic with a fake 16×16 mesh via chips count:
+    # use the planner's estimate directly on the production mesh shape
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+        size = 256
+
+    cfg8 = get_config("nemotron_4_340b")
+    assert cfg8.opt_8bit
+    st = [s for s in PL.make_strategies(FakeMesh())
+          if s.name == "fsdp_tp"][0]
+    est8 = PL.estimate_plan(cfg8, st, FakeMesh(), 4096, 256, "train")
+    assert est8.legal, est8
+    cfg32 = dataclasses.replace(cfg8, opt_8bit=False)
+    est32 = PL.estimate_plan(cfg32, st, FakeMesh(), 4096, 256, "train")
+    assert not est32.legal

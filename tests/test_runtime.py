@@ -1,0 +1,147 @@
+"""raylite runtime tests: DAG, lineage FT, retries, stragglers, elastic."""
+
+import time
+
+import pytest
+
+from repro.runtime import (ElasticController, ElasticPolicy, ObjectRef,
+                           TaskFailedError, TaskRuntime)
+
+
+@pytest.fixture
+def rt():
+    r = TaskRuntime(workers=4, speculation=False)
+    yield r
+    r.shutdown()
+
+
+def test_dag_chaining(rt):
+    def add(a, b):
+        return a + b
+
+    a = rt.submit(add, 1, 2)
+    b = rt.submit(add, a, 10)
+    c = rt.submit(add, a, b)
+    assert rt.get(c) == 16
+
+
+def test_async_submission_is_nonblocking(rt):
+    def slow(x):
+        time.sleep(0.2)
+        return x
+
+    t0 = time.perf_counter()
+    refs = [rt.submit(slow, i) for i in range(8)]
+    assert time.perf_counter() - t0 < 0.1  # submission returns immediately
+    assert rt.get(refs[-1]) == 7
+
+
+def test_lineage_replay_after_eviction(rt):
+    def mul(a, b):
+        return a * b
+
+    a = rt.submit(mul, 3, 4)
+    b = rt.submit(mul, a, 2)
+    assert rt.get(b) == 24
+    rt.store.evict(b)
+    assert rt.get(b) == 24
+    assert rt.lineage.replays >= 1
+
+
+def test_lineage_transitive_replay(rt):
+    def inc(x):
+        return x + 1
+
+    chain = rt.submit(inc, 0)
+    for _ in range(5):
+        chain = rt.submit(inc, chain)
+    assert rt.get(chain) == 6
+    # evict everything reachable and recover the tip
+    for oid in list(rt.store._data):
+        rt.store.evict(ObjectRef(oid))
+    # the store is empty; recompute from lineage
+    assert rt.lineage.reconstruct(chain) == 6
+
+
+def test_retry_on_failure(rt):
+    def flaky(x):
+        return x * 2
+
+    rt.failure_injections["test_retry_on_failure.<locals>.flaky"] = 2
+    ref = rt.submit(flaky, 21)
+    assert rt.get(ref) == 42
+    assert rt.stats()["retries"] >= 2
+
+
+def test_task_failure_surfaces(rt):
+    def boom():
+        raise ValueError("nope")
+
+    ref = rt.submit(boom)
+    with pytest.raises(TaskFailedError):
+        rt.get(ref)
+
+
+def test_straggler_speculation():
+    rt = TaskRuntime(workers=3, speculation=True, straggler_factor=2.0,
+                     straggler_min_s=0.05)
+    try:
+        state = {"first": True}
+
+        def work(i):
+            time.sleep(0.01)
+            return i
+
+        def straggler(i):
+            # first execution sleeps long; the speculative copy is fast
+            if state["first"]:
+                state["first"] = False
+                time.sleep(1.0)
+            return i
+
+        for i in range(10):
+            rt.get(rt.submit(work, i))
+        t0 = time.perf_counter()
+        ref = rt.submit(straggler, 99)
+        assert rt.get(ref, timeout=5.0) == 99
+        took = time.perf_counter() - t0
+        assert took < 1.0, f"speculation did not win: {took}"
+        assert rt.stats()["speculated"] >= 1
+    finally:
+        rt.shutdown()
+
+
+def test_elastic_scale_up_down(rt):
+    rt.scale_to(8)
+    time.sleep(0.3)
+    assert rt.pool.size == 8
+    rt.scale_to(2)
+    time.sleep(0.5)
+    assert rt.pool.size == 2
+
+
+def test_elastic_controller_grows_under_load(rt):
+    ctrl = ElasticController(rt, ElasticPolicy(min_workers=2,
+                                               max_workers=8, step=2))
+
+    def slow(i):
+        time.sleep(0.05)
+        return i
+
+    refs = [rt.submit(slow, i) for i in range(64)]
+    for _ in range(20):
+        ctrl.tick()
+        time.sleep(0.01)
+    assert rt.pool.size > 4 or rt.pool.queue_depth() == 0
+    rt.get(refs[-1])
+
+
+def test_worker_failure_requeues(rt):
+    def job(i):
+        time.sleep(0.05)
+        return i
+
+    refs = [rt.submit(job, i) for i in range(12)]
+    rt.pool.kill_worker()
+    rt.pool.add_worker()
+    assert [rt.get(r) for r in refs] == list(range(12))

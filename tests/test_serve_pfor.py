@@ -1,0 +1,143 @@
+"""Serving engine + distributed pfor integration tests."""
+
+import numpy as np
+import pytest
+
+from repro.core.compiler import compile_kernel
+from repro.runtime import TaskRuntime
+
+
+def test_engine_continuous_batching_matches_sequential():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as T
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = get_smoke_config("stablelm_3b")
+    params, _ = T.init_params(cfg, jax.random.key(5))
+    eng = ServeEngine(params, cfg, n_slots=2, max_seq=48)
+    prompts = [np.arange(4) % cfg.vocab, np.arange(7) % cfg.vocab,
+               np.arange(5) % cfg.vocab]
+    for i, p in enumerate(prompts):
+        eng.add_request(Request(f"r{i}", p, max_tokens=5))
+    done = eng.run_until_done()
+    assert len(done) == 3
+    by_id = {r.request_id: r for r in done}
+
+    # sequential reference: prefill + greedy decode per request
+    for i, p in enumerate(prompts):
+        caches, logits = T.prefill(
+            params, {"tokens": jnp.asarray(p, jnp.int32)[None]}, cfg,
+            max_seq=48)
+        toks = [int(jnp.argmax(logits[0]))]
+        for _ in range(4):
+            l2, caches = T.decode_step(
+                params, jnp.asarray([[toks[-1]]], jnp.int32), caches, cfg)
+            toks.append(int(jnp.argmax(l2[0])))
+        assert by_id[f"r{i}"].generated == toks, f"request {i}"
+
+
+def test_engine_slot_reuse():
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as T
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = get_smoke_config("stablelm_3b")
+    params, _ = T.init_params(cfg, jax.random.key(6))
+    eng = ServeEngine(params, cfg, n_slots=1, max_seq=32)
+    for i in range(3):
+        eng.add_request(Request(f"r{i}", np.arange(3 + i) % cfg.vocab,
+                                max_tokens=3))
+    done = eng.run_until_done()
+    assert len(done) == 3
+    assert eng.slots.utilization() == 0.0
+
+
+def test_fully_affine_loop_absorbed_not_distributed():
+    """Intra-node maximization wins for fully analyzable loops: the loop
+    is absorbed into one vectorized op, no tasks spawned (paper §4.2
+    'maximizing the iteration domain mapped to a single library call')."""
+    def saxpy(out: "ndarray[f64,2]", A: "ndarray[f64,2]",
+              x: "ndarray[f64,1]", N: int):
+        for i in range(0, N):
+            out[i, :] = A[i, :] * x[i]
+
+    rng = np.random.default_rng(0)
+    N, M = 64, 16
+    A = rng.normal(size=(N, M))
+    x = rng.normal(size=N)
+    rt = TaskRuntime(workers=2, speculation=False)
+    try:
+        ck = compile_kernel(saxpy, runtime=rt)
+        out = np.zeros((N, M))
+        ck.call_variant("np", out, A, x, N)
+        np.testing.assert_allclose(out, A * x[:, None])
+        assert not ck.sched.has_pfor          # absorbed
+        assert rt.stats()["tasks"] == 0
+    finally:
+        rt.shutdown()
+
+
+def test_pfor_distributed_matches_sequential():
+    """A loop with a materialization point (fft) stays explicit, is
+    detected parallel, and distributes over raylite tasks."""
+    def rowfft(out: "ndarray[c128,2]", A: "ndarray[c128,2]", N: int,
+               F: int):
+        for i in range(0, N):
+            row = np.fft.fft(A[i, :], F)
+            out[i, 0:F] = row * 2.0
+
+    rng = np.random.default_rng(0)
+    N, M, F = 32, 16, 16
+    A = rng.normal(size=(N, M)) + 1j * rng.normal(size=(N, M))
+    ref = np.fft.fft(A, F, axis=1) * 2.0
+
+    rt = TaskRuntime(workers=4, speculation=False)
+    try:
+        ck = compile_kernel(rowfft, runtime=rt, tile=4)
+        ck.pfor_config.distribute_threshold = 0  # force the DAG backend
+        out = np.zeros((N, F), complex)
+        ck.call_variant("np", out, A, N, F)
+        np.testing.assert_allclose(out, ref)
+        assert ck.sched.has_pfor
+        assert rt.stats()["tasks"] >= 8  # actually distributed
+    finally:
+        rt.shutdown()
+
+
+def test_pfor_sequential_below_threshold():
+    def scale(out: "ndarray[f64,2]", A: "ndarray[f64,2]", N: int):
+        for i in range(0, N):
+            out[i, :] = A[i, :] * 2.0
+
+    rng = np.random.default_rng(1)
+    A = rng.normal(size=(8, 4))
+    rt = TaskRuntime(workers=2, speculation=False)
+    try:
+        ck = compile_kernel(scale, runtime=rt)
+        # default threshold ≫ this tiny kernel → sequential path
+        out = np.zeros((8, 4))
+        ck.call_variant("np", out, A, 8)
+        np.testing.assert_allclose(out, A * 2.0)
+        assert rt.stats()["tasks"] == 0
+    finally:
+        rt.shutdown()
+
+
+def test_stap_pipeline_correctness():
+    from benchmarks.stap import (FFT_SIZE, make_data, stap_kernel,
+                                 stap_ref)
+
+    cubes, sv, mf, out = make_data(n_cubes=4)
+    out_ref = out.copy()
+    stap_ref(cubes, sv, mf, out_ref, 4, FFT_SIZE)
+    ck = compile_kernel(stap_kernel)
+    out_got = out.copy()
+    ck.call_variant("np", cubes, sv, mf, out_got, 4, FFT_SIZE)
+    np.testing.assert_allclose(out_got, out_ref, atol=1e-9)
+    # the cube loop must be recognized as a distributable pfor
+    assert ck.sched.has_pfor
