@@ -10,14 +10,35 @@ Pipeline (paper Fig. 4): Front-end (parse + type inference) → SCoP
 extraction (explicit+implicit loop unification) → dependence analysis →
 scheduling (absorption / distribution / pfor) → operator raising → code
 generation (np + jnp variants) → multi-version dispatcher.
+
+Hints can be hand-written (above) or harvested by the dynamic profiler
+(paper §1: "supplied by the programmer or obtained by dynamic profiler
+tools"):
+
+    @optimize(profile=True, warmup=8)   # no hints needed
+    def kernel(data, corr, M, N): ...
+
+    ck = optimize.from_trace(traced_fn)          # explicit trace → kernel
+
+With ``cache=VariantCache(dir)`` (or a path string) compiled variants
+persist on disk keyed by (source hash, type signature, backend); a warm
+process rebuilds the dispatcher from stored source and skips
+parse → SCoP → schedule → codegen entirely.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Callable, Dict, Optional
+import inspect
+import time
+from typing import Callable, Dict, Optional, Union
 
 import numpy as np
+
+from repro.profiler.cache import (CacheEntry, VariantCache, source_hash)
+from repro.profiler.hints import (synthesize_hint_tiers, synthesize_hints,
+                                  type_signature)
+from repro.profiler.tracer import FunctionTrace, Tracer
 
 from . import codegen, cost, parser, schedule as schedule_mod, scop
 from .multiversion import CompiledKernel, Variant
@@ -31,6 +52,44 @@ def _exec_variant(gen: codegen.GeneratedVariant, xp, extra: Dict) -> Callable:
     return ns[gen.fn_name]
 
 
+def _resolved_type_sig(fn: Callable,
+                       hints: Optional[Dict[str, str]]) -> str:
+    """Canonical per-param type signature (cache key component). Merges
+    source annotations with override hints and delegates the encoding to
+    :func:`repro.profiler.hints.type_signature`. Uses only
+    ``inspect.signature`` — deliberately cheap so the warm path never
+    touches the AST."""
+    try:
+        names = [p for p in inspect.signature(fn).parameters
+                 if p != "self"]
+    except (TypeError, ValueError):
+        names = []
+    anns = dict(getattr(fn, "__annotations__", {}) or {})
+    if hints:
+        anns.update(hints)
+    return type_signature(anns, names)
+
+
+def _make_np_variant(gen_np: codegen.GeneratedVariant,
+                     pfor_cfg: PforConfig) -> Variant:
+    np_fn = _exec_variant(gen_np, np, {"__pfor_run": pfor_cfg.make_runner()})
+    return Variant("np", np_fn, gen_np)
+
+
+def _make_jnp_variant(gen_jnp: codegen.GeneratedVariant) -> Optional[Variant]:
+    try:
+        import jax
+
+        # Numeric kernels carry float64 semantics (PolyBench); the LM
+        # stack requests bf16/f32 explicitly so this is safe globally.
+        jax.config.update("jax_enable_x64", True)
+        import jax.numpy as jnp
+    except Exception:
+        return None
+    jnp_fn = _exec_variant(gen_jnp, jnp, {})
+    return Variant("jnp", jnp_fn, gen_jnp)
+
+
 def compile_kernel(
     fn: Callable,
     *,
@@ -40,13 +99,35 @@ def compile_kernel(
     workers: int = 4,
     accel_threshold: float = cost.ACCEL_FLOP_THRESHOLD,
     enable_jax: bool = True,
+    hints: Optional[Dict[str, str]] = None,
+    cache: Optional[Union[VariantCache, str]] = None,
 ) -> CompiledKernel:
-    tir_fn = parser.parse_function(fn)
-    program = scop.extract(tir_fn)
-    sched = schedule_mod.schedule(program, distribute=distribute)
+    if isinstance(cache, str):
+        cache = VariantCache(cache)
 
     pfor_cfg = PforConfig(runtime=runtime, tile=tile, workers=workers)
     pfor_cfg.distribute_threshold = cost.DISTRIBUTE_FLOP_THRESHOLD
+
+    # backend tag carries every option that changes the *generated code*
+    # (schedule shape included); runtime knobs (tile/workers/thresholds)
+    # live in PforConfig / dispatch state rebuilt fresh on every load.
+    backend_tag = ("np+jnp" if enable_jax else "np") \
+        + (":dist" if distribute else ":nodist")
+    src_h = type_sig = None
+    if cache is not None:
+        src_h = source_hash(fn)
+        type_sig = _resolved_type_sig(fn, hints)
+        entry = cache.get(src_h, type_sig, backend_tag)
+        if entry is not None:
+            ck = _rebuild_from_entry(fn, entry, pfor_cfg, accel_threshold)
+            if ck is not None:
+                cache.stats.codegen_skipped += 1
+                return ck
+
+    t0 = time.perf_counter()
+    tir_fn = parser.parse_function(fn, hint_overrides=hints)
+    program = scop.extract(tir_fn)
+    sched = schedule_mod.schedule(program, distribute=distribute)
 
     variants: Dict[str, Variant] = {
         "original": Variant("original", fn),
@@ -54,37 +135,160 @@ def compile_kernel(
 
     # Optimized NumPy variant (always attempted; falls back statement-wise)
     gen_np = codegen.generate(sched, "np")
-    np_fn = _exec_variant(gen_np, np,
-                          {"__pfor_run": pfor_cfg.make_runner()})
-    variants["np"] = Variant("np", np_fn, gen_np)
+    variants["np"] = _make_np_variant(gen_np, pfor_cfg)
 
     # Accelerator variant — all-or-nothing, like the paper's CuPy conversion
     if enable_jax and not sched.has_opaque and not sched.has_pfor:
         try:
             gen_jnp = codegen.generate(sched, "jnp")
-            import jax
-
-            # Numeric kernels carry float64 semantics (PolyBench); the LM
-            # stack requests bf16/f32 explicitly so this is safe globally.
-            jax.config.update("jax_enable_x64", True)
-            import jax.numpy as jnp
-
-            jnp_fn = _exec_variant(gen_jnp, jnp, {})
-            variants["jnp"] = Variant("jnp", jnp_fn, gen_jnp)
+            v = _make_jnp_variant(gen_jnp)
+            if v is not None:
+                variants["jnp"] = v
         except codegen.EmitError:
             pass
+    compile_s = time.perf_counter() - t0
 
-    return CompiledKernel(fn, tir_fn.params, sched, variants,
-                          pfor_config=pfor_cfg,
-                          accel_threshold=accel_threshold)
+    ck = CompiledKernel(fn, tir_fn.params, sched, variants,
+                        pfor_config=pfor_cfg,
+                        accel_threshold=accel_threshold)
+
+    if cache is not None:
+        generated = {name: v.generated for name, v in variants.items()
+                     if v.generated is not None}
+        try:
+            cache.put(CacheEntry(
+                fn_name=ck.__name__, src_hash=src_h, type_sig=type_sig,
+                backend=backend_tag, params=list(tir_fn.params),
+                sched=sched, generated=generated, compile_s=compile_s))
+        except Exception:
+            pass  # cache write failure must never break compilation
+    return ck
 
 
-def optimize(fn: Optional[Callable] = None, **kw):
-    """Decorator form of :func:`compile_kernel`."""
-    if fn is not None and callable(fn):
-        return compile_kernel(fn, **kw)
+def _rebuild_from_entry(fn: Callable, entry: CacheEntry,
+                        pfor_cfg: PforConfig,
+                        accel_threshold: float) -> Optional[CompiledKernel]:
+    """Warm start: dispatcher from stored source, no front-end work."""
+    try:
+        variants: Dict[str, Variant] = {
+            "original": Variant("original", fn),
+        }
+        for name, gen in entry.generated.items():
+            if name == "np":
+                variants["np"] = _make_np_variant(gen, pfor_cfg)
+            elif name == "jnp":
+                v = _make_jnp_variant(gen)
+                if v is not None:
+                    variants[name] = v
+        ck = CompiledKernel(fn, entry.params, entry.sched, variants,
+                            pfor_config=pfor_cfg,
+                            accel_threshold=accel_threshold)
+        ck.from_cache = True
+        return ck
+    except Exception:
+        # a stale/incompatible entry degrades to a cold compile
+        return None
 
-    def deco(f):
+
+# ---------------------------------------------------------------------------
+# Profile-guided entry points (the dynamic-profiler half of §4.1)
+# ---------------------------------------------------------------------------
+
+class ProfiledFunction:
+    """Wrapper returned by ``optimize(profile=True)``.
+
+    Phase 1 (first ``warmup`` calls): run the original function under the
+    tracer, recording call signatures. Phase 2: synthesize a
+    legality-ordered hint set from the trace, compile through the normal
+    pipeline, and dispatch every later call through the multi-version
+    decision tree (original function stays the fallback)."""
+
+    def __init__(self, fn: Callable, *, warmup: int = 8,
+                 tracer: Optional[Tracer] = None,
+                 specializer=None, **compile_kw):
+        self.fn = fn
+        self.warmup = max(1, warmup)
+        self.tracer = tracer or Tracer()
+        self.traced = self.tracer.wrap(fn)
+        self.specializer = specializer
+        self.compile_kw = compile_kw
+        self.compiled: Optional[CompiledKernel] = None
+        self.tiers = None
+        functools.update_wrapper(self, fn)
+
+    @property
+    def trace(self) -> FunctionTrace:
+        return self.traced.__trace__
+
+    def __call__(self, *args, **kwargs):
+        if self.compiled is not None:
+            return self.compiled(*args, **kwargs)
+        out = self.traced(*args, **kwargs)
+        if self.trace.calls >= self.warmup:
+            try:
+                self.compile()
+            except Exception:
+                # stay on the traced original; retry next call is
+                # pointless with the same trace, so disable by doubling
+                self.warmup *= 2
+        return out
+
+    def compile(self) -> CompiledKernel:
+        """Fold the trace into hints and build the dispatcher now."""
+        if self.compiled is None:
+            self.tiers = synthesize_hint_tiers(self.trace)
+            # all tiers share hint strings; one compile serves them all
+            hints = self.tiers[-1].hints
+            self.compiled = compile_kernel(self.fn, hints=hints,
+                                           **self.compile_kw)
+            if self.specializer is not None:
+                self.specializer.register(self.compiled)
+        return self.compiled
+
+    def stats(self) -> Dict[str, object]:
+        out: Dict[str, object] = {
+            "traced_calls": self.trace.calls,
+            "distinct_signatures": len(self.trace.records),
+            "compiled": self.compiled is not None,
+        }
+        if self.compiled is not None:
+            out["dispatch"] = self.compiled.stats()
+        return out
+
+
+def optimize(fn: Optional[Callable] = None, *, profile: bool = False,
+             warmup: int = 8, tracer: Optional[Tracer] = None,
+             specializer=None, **kw):
+    """Decorator form of :func:`compile_kernel`.
+
+    ``profile=True`` defers compilation behind a tracing phase so the
+    kernel needs no hand-written hints."""
+    def build(f):
+        if profile:
+            return ProfiledFunction(f, warmup=warmup, tracer=tracer,
+                                    specializer=specializer, **kw)
         return compile_kernel(f, **kw)
 
-    return deco
+    if fn is not None and callable(fn):
+        return build(fn)
+    return build
+
+
+def from_trace(fn: Callable, trace: Optional[FunctionTrace] = None,
+               **kw) -> CompiledKernel:
+    """Compile using hints synthesized from an existing trace.
+
+    ``fn`` may be a tracer-wrapped function (its trace is used
+    automatically) or the bare function plus an explicit ``trace``."""
+    if trace is None:
+        trace = getattr(fn, "__trace__", None)
+        if trace is None:
+            raise ValueError(
+                "from_trace needs a tracer-wrapped function or an "
+                "explicit trace= argument")
+    target = getattr(fn, "__wrapped_fn__", fn)
+    hints = synthesize_hints(trace)
+    return compile_kernel(target, hints=hints, **kw)
+
+
+optimize.from_trace = from_trace  # type: ignore[attr-defined]

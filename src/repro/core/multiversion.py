@@ -16,15 +16,17 @@ at lower levels."
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from . import cost
 from .codegen import GeneratedVariant
 from .schedule import Schedule
-from .types import TypeInfo, matches, runtime_typeinfo
+from .types import (TypeInfo, matches, nested_list_shape,
+                    runtime_typeinfo)
 
 
 @dataclass
@@ -47,6 +49,10 @@ class DispatchRecord:
 class CompiledKernel:
     """Callable decision tree over specialized variants."""
 
+    # stop recording novel signatures past this point (pathologically
+    # dynamic shapes must not grow memory without bound)
+    MAX_TRACKED_SIGS = 4096
+
     def __init__(self, original: Callable, params: List[Tuple[str, TypeInfo]],
                  sched: Schedule, variants: Dict[str, Variant],
                  pfor_config=None,
@@ -57,8 +63,17 @@ class CompiledKernel:
         self.variants = variants
         self.pfor_config = pfor_config
         self.accel_threshold = accel_threshold
-        self.history: List[DispatchRecord] = []
+        # ring buffer: long-running serving processes dispatch millions
+        # of times; keep only the recent window
+        self.history: Deque[DispatchRecord] = deque(maxlen=10_000)
         self._flop_cache: Dict[Tuple, float] = {}
+        # dispatch stats watched by the profiler's specializer: per exact
+        # call-signature counts + the decision the full tree made for it
+        self.shape_counts: Dict[Tuple, int] = {}
+        self.last_decisions: Dict[Tuple, Tuple[str, float, bool]] = {}
+        self.specializations: Dict[Tuple, Any] = {}
+        self.spec_hits: int = 0
+        self.from_cache: bool = False   # built from the persistent cache?
         self.__name__ = getattr(original, "__name__", "kernel")
         self.__doc__ = getattr(original, "__doc__", None)
 
@@ -85,12 +100,7 @@ class CompiledKernel:
                 env[name] = int(val)
             arr = val
             if isinstance(arr, list):
-                shape = []
-                x = arr
-                while isinstance(x, list):
-                    shape.append(len(x))
-                    x = x[0] if x else None
-                for d, s in enumerate(shape):
+                for d, s in enumerate(nested_list_shape(arr)):
                     env[f"{name}__d{d}"] = s
             elif hasattr(arr, "shape"):
                 for d, s in enumerate(arr.shape):
@@ -103,6 +113,25 @@ class CompiledKernel:
             self._flop_cache[key] = cost.schedule_flops(
                 self.sched, dict(key))
         return self._flop_cache[key]
+
+    def _sig(self, bound: Dict[str, Any]) -> Tuple:
+        """Exact call signature: (name, dtype, shape) per array param,
+        integer values for int scalars (they drive the cost model)."""
+        parts = []
+        for name, _ in self.params:
+            v = bound.get(name)
+            if isinstance(v, np.ndarray):
+                parts.append((name, str(v.dtype), v.shape))
+            elif isinstance(v, (int, np.integer)) and not isinstance(
+                    v, bool):
+                parts.append((name, "int", int(v)))
+            elif isinstance(v, list):
+                parts.append((name, "list", nested_list_shape(v)))
+            elif hasattr(v, "shape") and hasattr(v, "dtype"):
+                parts.append((name, str(v.dtype), tuple(v.shape)))
+            else:
+                parts.append((name, type(v).__name__, None))
+        return tuple(parts)
 
     # -- the decision tree ------------------------------------------------
     def select(self, bound: Dict[str, Any]) -> Tuple[Variant,
@@ -124,7 +153,26 @@ class CompiledKernel:
 
     def __call__(self, *args, **kwargs):
         bound = self._bind(args, kwargs)
-        variant, rec = self.select(bound)
+        sig = self._sig(bound)
+        spec = self.specializations.get(sig)
+        if spec is not None:
+            # hot path pinned by the specializer: replay the decision the
+            # full tree made for this exact signature (legality included)
+            variant = self.variants[spec.variant_name]
+            rec = DispatchRecord(spec.variant_name, spec.legality_ok,
+                                 spec.flops, True)
+            spec.hits += 1
+            self.spec_hits += 1
+        else:
+            variant, rec = self.select(bound)
+            n = self.shape_counts.get(sig)
+            if n is not None:
+                self.shape_counts[sig] = n + 1
+            elif len(self.shape_counts) < self.MAX_TRACKED_SIGS:
+                self.shape_counts[sig] = 1
+            if sig in self.shape_counts:
+                self.last_decisions[sig] = (variant.name, rec.flops,
+                                            rec.legality_ok)
         self.history.append(rec)
         if self.pfor_config is not None:
             self.pfor_config.estimated_flops = rec.flops
@@ -133,6 +181,29 @@ class CompiledKernel:
         variant.calls += 1
         variant.total_s += time.perf_counter() - t0
         return out
+
+    # -- specialization hooks (repro.profiler.specializer) ---------------
+    def install_specialization(self, spec) -> None:
+        """Hot-swap a pinned decision into the tree. The original
+        function remains the fallback for every non-matching signature."""
+        self.specializations[spec.sig] = spec
+
+    def drop_specialization(self, sig: Tuple) -> None:
+        self.specializations.pop(sig, None)
+
+    def stats(self) -> Dict[str, Any]:
+        """Dispatch/cache telemetry (consumed by serve.engine)."""
+        return {
+            "calls": sum(v.calls for v in self.variants.values()),
+            "variants": {
+                name: {"calls": v.calls,
+                       "total_s": round(v.total_s, 6)}
+                for name, v in self.variants.items()},
+            "distinct_signatures": len(self.shape_counts),
+            "specializations": len(self.specializations),
+            "spec_hits": self.spec_hits,
+            "from_cache": self.from_cache,
+        }
 
     def call_variant(self, name: str, *args, **kwargs):
         """Force a specific variant (benchmark harness hook)."""

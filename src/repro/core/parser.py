@@ -349,8 +349,16 @@ class TypeInference:
 # Public API
 # ---------------------------------------------------------------------------
 
-def parse_function(fn: Callable) -> tir.Function:
-    """Parse a live Python function (with type hints) into typed TIR."""
+def parse_function(fn: Callable,
+                   hint_overrides: Optional[Dict[str, str]] = None
+                   ) -> tir.Function:
+    """Parse a live Python function (with type hints) into typed TIR.
+
+    ``hint_overrides`` maps parameter names to hint strings and takes
+    precedence over source annotations — this is how profiler-synthesized
+    hints (paper §1: hints "obtained by dynamic profiler tools") enter the
+    same front-end as hand-written ones.
+    """
     src = textwrap.dedent(inspect.getsource(fn))
     tree = ast.parse(src)
     fdef = None
@@ -364,6 +372,8 @@ def parse_function(fn: Callable) -> tir.Function:
         hints = dict(getattr(fn, "__annotations__", {}) or {})
     except Exception:  # pragma: no cover
         hints = {}
+    if hint_overrides:
+        hints.update(hint_overrides)
     params: List[Tuple[str, TypeInfo]] = []
     for a in fdef.args.args:
         if a.arg == "self":

@@ -211,6 +211,18 @@ def broadcast(a: TypeInfo, b: TypeInfo) -> TypeInfo:
     return TypeInfo.array(dtype or "float64", rank)
 
 
+def nested_list_shape(value) -> "tuple":
+    """Shape of a nested list-of-lists judged by its first elements:
+    ``[[1,2],[3,4],[5,6]]`` → ``(3, 2)``. The single implementation used
+    by runtime legality checks, dispatch signatures, and the tracer."""
+    dims = []
+    x = value
+    while isinstance(x, list):
+        dims.append(len(x))
+        x = x[0] if x else None
+    return tuple(dims)
+
+
 def runtime_typeinfo(value) -> TypeInfo:
     """TypeInfo of an actual runtime value (used by legality checks)."""
     import numpy as _np
@@ -233,6 +245,9 @@ def runtime_typeinfo(value) -> TypeInfo:
     except Exception:  # pragma: no cover
         pass
     if isinstance(value, list):
+        # NB: depth counts non-empty levels only — an empty list stays
+        # rank-0/unknown so legality falls back conservatively. This is
+        # intentionally NOT nested_list_shape (which sizes every level).
         depth, elem = 0, value
         while isinstance(elem, list) and elem:
             depth += 1

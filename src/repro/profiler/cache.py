@@ -1,0 +1,170 @@
+"""Persistent specialization cache: compiled variants that survive restarts.
+
+Keyed by ``(source hash, type signature, backend)``. Each entry holds the
+generated variant sources plus the schedule metadata ``core/codegen.py``
+produced, so a warm process rebuilds the multi-version dispatcher by
+``exec``-ing stored source — skipping parse → SCoP → dependence →
+schedule → codegen entirely. This is what turns the per-script compiler
+into a serving-grade system: cold compile once, warm-start everywhere.
+
+Everything stored is either generated Python source (text) or plain
+dataclasses (``Schedule``/TIR/``TypeInfo`` — no callables), so pickle is
+safe and stable. Writes are atomic (tempfile + ``os.replace``) so
+concurrent processes sharing one cache directory never observe torn
+entries; last-writer-wins is fine because entries are deterministic
+functions of their key.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import inspect
+import json
+import os
+import pickle
+import tempfile
+import textwrap
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+_PICKLE_PROTO = 4
+_FORMAT_VERSION = 1
+
+
+def source_hash(fn_or_src) -> str:
+    """Stable digest of a kernel's (dedented) source text."""
+    if callable(fn_or_src):
+        src = textwrap.dedent(inspect.getsource(fn_or_src))
+    else:
+        src = textwrap.dedent(str(fn_or_src))
+    return hashlib.sha256(src.encode()).hexdigest()[:16]
+
+
+def cache_key(src_hash: str, type_sig: str, backend: str) -> str:
+    raw = f"v{_FORMAT_VERSION}|{src_hash}|{type_sig}|{backend}"
+    return hashlib.sha256(raw.encode()).hexdigest()[:24]
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    puts: int = 0
+    errors: int = 0
+    # compiles that were skipped entirely thanks to a hit
+    codegen_skipped: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "puts": self.puts, "errors": self.errors,
+                "codegen_skipped": self.codegen_skipped}
+
+
+@dataclass
+class CacheEntry:
+    """One compiled kernel: schedule + generated variant sources."""
+
+    fn_name: str
+    src_hash: str
+    type_sig: str
+    backend: str
+    params: List[Tuple[str, Any]]       # (name, TypeInfo)
+    sched: Any                          # core.schedule.Schedule
+    generated: Dict[str, Any]           # variant name → GeneratedVariant
+    compile_s: float = 0.0              # cold compile wall time
+    created_at: float = field(default_factory=time.time)
+
+
+class VariantCache:
+    """On-disk store of :class:`CacheEntry` objects.
+
+    A fresh ``VariantCache(same_dir)`` in a new process sees every entry
+    the old process put — that is the whole point.
+    """
+
+    def __init__(self, cache_dir: str):
+        self.cache_dir = os.path.abspath(os.path.expanduser(cache_dir))
+        os.makedirs(self.cache_dir, exist_ok=True)
+        self.stats = CacheStats()
+
+    # -- paths ----------------------------------------------------------
+    def _path(self, key: str) -> str:
+        return os.path.join(self.cache_dir, f"{key}.pkl")
+
+    # -- core API -------------------------------------------------------
+    def get(self, src_hash: str, type_sig: str,
+            backend: str) -> Optional[CacheEntry]:
+        key = cache_key(src_hash, type_sig, backend)
+        path = self._path(key)
+        if not os.path.exists(path):
+            self.stats.misses += 1
+            return None
+        try:
+            with open(path, "rb") as f:
+                entry = pickle.load(f)
+        except Exception:
+            # corrupt/stale entry: treat as miss, drop it
+            self.stats.errors += 1
+            self.stats.misses += 1
+            try:
+                os.unlink(path)
+            except OSError:
+                pass
+            return None
+        self.stats.hits += 1
+        return entry
+
+    def put(self, entry: CacheEntry) -> str:
+        key = cache_key(entry.src_hash, entry.type_sig, entry.backend)
+        path = self._path(key)
+        fd, tmp = tempfile.mkstemp(dir=self.cache_dir, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                pickle.dump(entry, f, protocol=_PICKLE_PROTO)
+            os.replace(tmp, path)
+        except Exception:
+            self.stats.errors += 1
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        self.stats.puts += 1
+        return key
+
+    # -- maintenance ----------------------------------------------------
+    def entries(self) -> List[str]:
+        return sorted(k[:-4] for k in os.listdir(self.cache_dir)
+                      if k.endswith(".pkl"))
+
+    def clear(self) -> int:
+        n = 0
+        for name in os.listdir(self.cache_dir):
+            if name.endswith(".pkl"):
+                os.unlink(os.path.join(self.cache_dir, name))
+                n += 1
+        return n
+
+    def telemetry(self) -> Dict[str, Any]:
+        return {"dir": self.cache_dir,
+                "entries": len(self.entries()),
+                **self.stats.as_dict()}
+
+    def dump_index(self) -> str:
+        """Write a human-readable index.json next to the entries."""
+        idx = []
+        for key in self.entries():
+            try:
+                with open(self._path(key), "rb") as f:
+                    e = pickle.load(f)
+                idx.append({"key": key, "fn": e.fn_name,
+                            "type_sig": e.type_sig, "backend": e.backend,
+                            "compile_s": round(e.compile_s, 4),
+                            "created_at": e.created_at})
+            except Exception:
+                continue
+        path = os.path.join(self.cache_dir, "index.json")
+        with open(path, "w") as f:
+            json.dump(idx, f, indent=2)
+        return path

@@ -1,0 +1,148 @@
+"""Background specializer: promote hot call sites to pinned fast paths.
+
+Watches the dispatch statistics every :class:`~repro.core.multiversion.
+CompiledKernel` already collects (per shape-signature call counts and the
+decision the tree made for each), and when a signature crosses the hot
+threshold, installs a :class:`Specialization` — the fully resolved
+dispatch decision (variant + precomputed FLOP estimate) — into the
+kernel's decision tree. Subsequent calls with that exact signature skip
+legality matching and FLOP estimation entirely.
+
+Correctness guarantee (paper §4.1) is preserved by construction: a
+specialization only fires on an *exact* signature match, the decision it
+replays was produced by the full legality→profitability tree for that
+same signature, and every non-matching call — including the first call of
+any new shape — still walks the original tree with the user's function as
+the terminal fallback.
+
+The thread is optional: ``scan_once()`` gives deterministic, test-friendly
+promotion; ``start()`` runs the same scan on an interval.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+
+@dataclass
+class Specialization:
+    """A pinned dispatch decision for one exact call signature."""
+
+    sig: Tuple
+    variant_name: str
+    flops: float
+    legality_ok: bool
+    tier: str = "exact"
+    promoted_at: float = field(default_factory=time.time)
+    hits: int = 0
+
+
+class Specializer:
+    """Registry + promotion loop over compiled kernels.
+
+    ``hot_threshold`` is the call count at which a signature is considered
+    hot. Kernels are registered by name; the same registry doubles as the
+    serving engine's kernel telemetry source.
+    """
+
+    def __init__(self, hot_threshold: int = 16,
+                 interval_s: float = 0.05,
+                 max_specializations_per_kernel: int = 64):
+        self.hot_threshold = hot_threshold
+        self.interval_s = interval_s
+        self.max_per_kernel = max_specializations_per_kernel
+        self.kernels: Dict[str, Any] = {}
+        self.promotions: List[Tuple[str, Specialization]] = []
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self._lock = threading.Lock()
+
+    # -- registry -------------------------------------------------------
+    def register(self, kernel, name: Optional[str] = None) -> None:
+        with self._lock:
+            self.kernels[name or kernel.__name__] = kernel
+
+    def unregister(self, name: str) -> None:
+        with self._lock:
+            self.kernels.pop(name, None)
+
+    # -- promotion ------------------------------------------------------
+    def scan_once(self) -> List[Specialization]:
+        """One promotion sweep; returns newly installed specializations."""
+        promoted: List[Specialization] = []
+        with self._lock:
+            kernels = list(self.kernels.items())
+        for kname, ck in kernels:
+            counts = getattr(ck, "shape_counts", None)
+            decisions = getattr(ck, "last_decisions", None)
+            installed = getattr(ck, "specializations", None)
+            if counts is None or decisions is None or installed is None:
+                continue
+            if len(installed) >= self.max_per_kernel:
+                continue
+            # snapshot to tolerate concurrent dispatch
+            for sig, n in list(counts.items()):
+                if n < self.hot_threshold or sig in installed:
+                    continue
+                dec = decisions.get(sig)
+                if dec is None:
+                    continue
+                variant_name, flops, legality_ok = dec
+                spec = Specialization(sig, variant_name, flops,
+                                      legality_ok)
+                ck.install_specialization(spec)
+                promoted.append(spec)
+                self.promotions.append((kname, spec))
+                if len(installed) >= self.max_per_kernel:
+                    break
+        return promoted
+
+    # -- background thread ----------------------------------------------
+    def start(self) -> None:
+        if self._thread is not None:
+            return
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.wait(self.interval_s):
+                try:
+                    self.scan_once()
+                except Exception:
+                    # promotion is best-effort; never kill the app thread
+                    pass
+
+        self._thread = threading.Thread(target=loop, daemon=True,
+                                        name="automphc-specializer")
+        self._thread.start()
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join(timeout=2.0)
+        self._thread = None
+
+    def __enter__(self) -> "Specializer":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- telemetry ------------------------------------------------------
+    def telemetry(self) -> Dict[str, Any]:
+        with self._lock:
+            kernels = list(self.kernels.items())
+        out: Dict[str, Any] = {
+            "hot_threshold": self.hot_threshold,
+            "promotions": len(self.promotions),
+            "running": self._thread is not None,
+            "kernels": {},
+        }
+        for name, ck in kernels:
+            stats = ck.stats() if hasattr(ck, "stats") else {}
+            out["kernels"][name] = stats
+        return out

@@ -36,8 +36,18 @@ class Request:
 
 
 class ServeEngine:
+    """Continuous-batching engine.
+
+    ``kernel_registry`` (a :class:`repro.profiler.specializer.Specializer`
+    or a plain ``{name: CompiledKernel}`` dict) and ``variant_cache``
+    (:class:`repro.profiler.cache.VariantCache`) are optional attachments;
+    when present, :meth:`telemetry` folds their dispatch/cache counters
+    into the engine's serving stats so one endpoint answers "what is the
+    compiler doing under this traffic"."""
+
     def __init__(self, params, cfg: ArchConfig, *, n_slots: int = 4,
-                 max_seq: int = 256):
+                 max_seq: int = 256, kernel_registry=None,
+                 variant_cache=None):
         self.params = params
         self.cfg = cfg
         self.max_seq = max_seq
@@ -46,6 +56,11 @@ class ServeEngine:
         self.queue: List[Request] = []
         self.active: Dict[int, Request] = {}
         self.finished: List[Request] = []
+        self.kernel_registry = kernel_registry
+        self.variant_cache = variant_cache
+        self.ticks = 0
+        self.prefills = 0
+        self.tokens_generated = 0
 
         def _prefill(params, tokens):
             return T.prefill(params, {"tokens": tokens}, cfg, max_seq)
@@ -81,6 +96,8 @@ class ServeEngine:
             one_cache, logits = self._prefill(self.params, tokens)
             tok = int(jnp.argmax(logits[0]))
             req.generated.append(tok)
+            self.prefills += 1
+            self.tokens_generated += 1
             req.first_token_s = time.perf_counter()
             self.caches = self._insert(self.caches, one_cache,
                                        jnp.int32(slot))
@@ -91,6 +108,7 @@ class ServeEngine:
         """One engine tick: admit + one batched decode. Returns number of
         active requests after the tick."""
         self._admit()
+        self.ticks += 1
         if not self.active:
             return 0
         n_slots = self.slots.n_slots
@@ -105,6 +123,7 @@ class ServeEngine:
         for slot, req in self.active.items():
             tok = int(next_tokens[slot])
             req.generated.append(tok)
+            self.tokens_generated += 1
             self.slots.advance(slot)
             if (len(req.generated) >= req.max_tokens
                     or (req.eos_id is not None and tok == req.eos_id)
@@ -122,3 +141,27 @@ class ServeEngine:
                 break
             self.step()
         return self.finished
+
+    # -- telemetry ----------------------------------------------------------
+    def telemetry(self) -> Dict[str, object]:
+        """Serving + compiler-dispatch + variant-cache counters."""
+        out: Dict[str, object] = {
+            "ticks": self.ticks,
+            "prefills": self.prefills,
+            "tokens_generated": self.tokens_generated,
+            "queued": len(self.queue),
+            "active": len(self.active),
+            "finished": len(self.finished),
+            "slot_utilization": self.slots.utilization(),
+        }
+        reg = self.kernel_registry
+        if reg is not None:
+            if hasattr(reg, "telemetry"):        # Specializer
+                out["kernels"] = reg.telemetry()
+            else:                                # plain dict of kernels
+                out["kernels"] = {
+                    name: ck.stats() for name, ck in reg.items()
+                    if hasattr(ck, "stats")}
+        if self.variant_cache is not None:
+            out["variant_cache"] = self.variant_cache.telemetry()
+        return out

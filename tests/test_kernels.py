@@ -1,12 +1,13 @@
-"""Pallas kernel parity: interpret-mode kernels vs pure-jnp oracles,
-with hypothesis shape/dtype sweeps."""
+"""Pallas kernel parity: interpret-mode kernels vs pure-jnp oracles.
 
-import hypothesis.strategies as st
+Hypothesis shape/dtype sweeps run when hypothesis is installed; the
+deterministic parity tests below always run.
+"""
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
 
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
@@ -15,19 +16,19 @@ from repro.kernels.matmul.ref import matmul_ref
 from repro.kernels.mamba_scan.ops import mamba_scan
 from repro.kernels.mamba_scan.ref import mamba_scan_ref
 
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
 
 # ---------------------------------------------------------------------------
 # matmul
 # ---------------------------------------------------------------------------
 
-@given(
-    m=st.sampled_from([16, 64, 100, 128]),
-    k=st.sampled_from([32, 128, 300]),
-    n=st.sampled_from([16, 64, 200]),
-    dtype=st.sampled_from(["float32", "bfloat16"]),
-)
-@settings(max_examples=12, deadline=None)
-def test_matmul_sweep(m, k, n, dtype):
+def _check_matmul(m, k, n, dtype):
     rng = np.random.default_rng(m * 1000 + k * 10 + n)
     x = jnp.asarray(rng.normal(size=(m, k)), dtype)
     y = jnp.asarray(rng.normal(size=(k, n)), dtype)
@@ -40,20 +41,28 @@ def test_matmul_sweep(m, k, n, dtype):
                                atol=tol, rtol=tol)
 
 
+def test_matmul_smoke():
+    _check_matmul(64, 32, 16, "float32")
+    _check_matmul(100, 300, 64, "float32")
+
+
+if HAVE_HYPOTHESIS:
+    @given(
+        m=st.sampled_from([16, 64, 100, 128]),
+        k=st.sampled_from([32, 128, 300]),
+        n=st.sampled_from([16, 64, 200]),
+        dtype=st.sampled_from(["float32", "bfloat16"]),
+    )
+    @settings(max_examples=12, deadline=None)
+    def test_matmul_sweep(m, k, n, dtype):
+        _check_matmul(m, k, n, dtype)
+
+
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
 
-@given(
-    sq=st.sampled_from([64, 128]),
-    h=st.sampled_from([2, 4]),
-    kvh=st.sampled_from([1, 2]),
-    d=st.sampled_from([32, 64]),
-    window=st.sampled_from([0, 32]),
-    softcap=st.sampled_from([0.0, 30.0]),
-)
-@settings(max_examples=10, deadline=None)
-def test_flash_attention_sweep(sq, h, kvh, d, window, softcap):
+def _check_flash_attention(sq, h, kvh, d, window, softcap):
     if h % kvh:
         kvh = 1
     rng = np.random.default_rng(sq + h * 7 + d)
@@ -67,6 +76,25 @@ def test_flash_attention_sweep(sq, h, kvh, d, window, softcap):
                         softcap=softcap)
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_smoke():
+    _check_flash_attention(64, 2, 1, 32, 0, 0.0)
+    _check_flash_attention(64, 4, 2, 32, 32, 30.0)
+
+
+if HAVE_HYPOTHESIS:
+    @given(
+        sq=st.sampled_from([64, 128]),
+        h=st.sampled_from([2, 4]),
+        kvh=st.sampled_from([1, 2]),
+        d=st.sampled_from([32, 64]),
+        window=st.sampled_from([0, 32]),
+        softcap=st.sampled_from([0.0, 30.0]),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_flash_attention_sweep(sq, h, kvh, d, window, softcap):
+        _check_flash_attention(sq, h, kvh, d, window, softcap)
 
 
 def test_flash_attention_matches_model_chunked_path():
@@ -88,14 +116,7 @@ def test_flash_attention_matches_model_chunked_path():
 # mamba scan
 # ---------------------------------------------------------------------------
 
-@given(
-    l=st.sampled_from([32, 64]),
-    inner=st.sampled_from([8, 16]),
-    n=st.sampled_from([4, 8]),
-    chunk=st.sampled_from([8, 16]),
-)
-@settings(max_examples=8, deadline=None)
-def test_mamba_scan_sweep(l, inner, n, chunk):
+def _check_mamba_scan(l, inner, n, chunk):
     rng = np.random.default_rng(l + inner + n)
     B = 2
     x = jnp.asarray(rng.normal(size=(B, l, inner)), jnp.float32)
@@ -111,6 +132,22 @@ def test_mamba_scan_sweep(l, inner, n, chunk):
     ref = mamba_scan_ref(x, dt, Bm, Cm, a, d)
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                atol=2e-4, rtol=2e-4)
+
+
+def test_mamba_scan_smoke():
+    _check_mamba_scan(32, 8, 4, 8)
+
+
+if HAVE_HYPOTHESIS:
+    @given(
+        l=st.sampled_from([32, 64]),
+        inner=st.sampled_from([8, 16]),
+        n=st.sampled_from([4, 8]),
+        chunk=st.sampled_from([8, 16]),
+    )
+    @settings(max_examples=8, deadline=None)
+    def test_mamba_scan_sweep(l, inner, n, chunk):
+        _check_mamba_scan(l, inner, n, chunk)
 
 
 def test_mamba_scan_chunking_invariance():

@@ -11,6 +11,17 @@ from repro.train import AdamWConfig, init_opt_state, make_train_step
 
 B, S = 2, 16
 
+# Big-config smokes dominate suite wall time; the small trio keeps every
+# code path (dense / MoE / recurrent) in the fast tier-1 run and the rest
+# runs under `pytest -m slow`.
+_FAST_ARCHS = {"stablelm_3b", "xlstm_125m", "olmoe_1b_7b"}
+
+
+def _arch_params(archs):
+    return [a if a in _FAST_ARCHS
+            else pytest.param(a, marks=pytest.mark.slow)
+            for a in archs]
+
 
 def _batch(cfg):
     batch = {"labels": jnp.ones((B, S), jnp.int32)}
@@ -24,7 +35,7 @@ def _batch(cfg):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", _arch_params(ARCHS))
 def test_smoke_forward_loss(arch):
     cfg = get_smoke_config(arch)
     params, specs = T.init_params(cfg, jax.random.key(0))
@@ -34,7 +45,7 @@ def test_smoke_forward_loss(arch):
     assert float(loss) > 0
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", _arch_params(ARCHS))
 def test_smoke_train_step(arch):
     cfg = get_smoke_config(arch)
     params, _ = T.init_params(cfg, jax.random.key(1))
@@ -50,9 +61,9 @@ def test_smoke_train_step(arch):
     assert moved, f"{arch}: no parameter update"
 
 
-@pytest.mark.parametrize("arch", ["stablelm_3b", "gemma2_2b",
-                                  "jamba_1_5_large_398b", "xlstm_125m",
-                                  "seamless_m4t_medium"])
+@pytest.mark.parametrize("arch", _arch_params(
+    ["stablelm_3b", "gemma2_2b", "jamba_1_5_large_398b", "xlstm_125m",
+     "seamless_m4t_medium"]))
 def test_smoke_prefill_decode(arch):
     cfg = get_smoke_config(arch)
     params, _ = T.init_params(cfg, jax.random.key(2))

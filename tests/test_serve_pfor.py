@@ -7,6 +7,7 @@ from repro.core.compiler import compile_kernel
 from repro.runtime import TaskRuntime
 
 
+@pytest.mark.slow
 def test_engine_continuous_batching_matches_sequential():
     import jax
     import jax.numpy as jnp

@@ -4,6 +4,59 @@ import numpy as np
 import pytest
 
 
+def _covariance_unhinted(data, cov, mean, M, N):
+    for j in range(0, M):
+        mean[j] = 0.0
+        for i in range(0, N):
+            mean[j] = mean[j] + data[i, j]
+        mean[j] = mean[j] / N
+    for i in range(0, N):
+        for j in range(0, M):
+            data[i, j] = data[i, j] - mean[j]
+    for i in range(0, M):
+        for j in range(i, M):
+            cov[i, j] = 0.0
+            for k in range(0, N):
+                cov[i, j] = cov[i, j] + data[k, i] * data[k, j]
+            cov[i, j] = cov[i, j] / (N - 1.0)
+            cov[j, i] = cov[i, j]
+
+
+def test_end_to_end_profile_compile_dispatch_restart(tmp_path):
+    """The closed loop the profiler subsystem adds to the paper flow:
+    trace an *unhinted* kernel → synthesize hints → compile → dispatch
+    (allclose with the original), then warm-start a fresh compiler
+    instance from the persistent cache (codegen skipped, verified by
+    telemetry)."""
+    from repro.core.compiler import compile_kernel, optimize
+    from repro.profiler import VariantCache, synthesize_hints
+
+    M, N = 14, 18
+    rng = np.random.default_rng(2)
+    data0 = rng.normal(size=(N, M))
+    ref_cov = np.zeros((M, M))
+    _covariance_unhinted(data0.copy(), ref_cov, np.zeros(M), M, N)
+
+    profiled = optimize(_covariance_unhinted, profile=True, warmup=2)
+    for _ in range(4):
+        cov, mean = np.zeros((M, M)), np.zeros(M)
+        profiled(data0.copy(), cov, mean, M, N)
+        np.testing.assert_allclose(cov, ref_cov, atol=1e-8)
+    assert profiled.compiled is not None
+    assert profiled.compiled.history[-1].legality_ok
+
+    cache_dir = str(tmp_path / "vcache")
+    hints = synthesize_hints(profiled.trace)
+    compile_kernel(_covariance_unhinted, hints=hints,
+                   cache=VariantCache(cache_dir))
+    warm = VariantCache(cache_dir)           # fresh instance: "restart"
+    ck = compile_kernel(_covariance_unhinted, hints=hints, cache=warm)
+    assert warm.stats.codegen_skipped == 1 and ck.from_cache
+    cov, mean = np.zeros((M, M)), np.zeros(M)
+    ck(data0.copy(), cov, mean, M, N)
+    np.testing.assert_allclose(cov, ref_cov, atol=1e-8)
+
+
 def test_end_to_end_correlation_paper_flow():
     """The paper's running example (Figs. 1/2/6): both input styles
     compile, raise the triangular loop to dot, dispatch through the
@@ -30,6 +83,7 @@ def test_end_to_end_correlation_paper_flow():
         assert ck.history[-1].legality_ok
 
 
+@pytest.mark.slow
 def test_end_to_end_training_loss_decreases():
     """Tiny LM trained on learnable synthetic data: loss must drop."""
     import jax
@@ -59,6 +113,7 @@ def test_end_to_end_training_loss_decreases():
     assert not any(np.isnan(x) for x in losses)
 
 
+@pytest.mark.slow
 def test_end_to_end_checkpoint_restart_resume():
     """Fault-tolerance drill: train, checkpoint, 'crash', restore, and
     verify identical continuation."""
