@@ -1,0 +1,149 @@
+"""Producer–consumer chain kernels for the fusion benchmark.
+
+PolyBench's classics are dominated by their BLAS-3 contractions, so the
+fusion pass's memory-traffic savings barely move their clocks. These
+kernels isolate the patterns fusion targets — read-modify-write
+elementwise chains, kernel-local intermediates, and per-iteration temps —
+at sizes where the arrays exceed the last-level cache and every eliminated
+store/load pass is wall-clock visible. Same registry schema as
+``polybench_kernels.KERNELS`` (minus the list style).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# elem_chain: out = (A*B + A + B) * 0.5, written as an RMW chain
+# ---------------------------------------------------------------------------
+
+def elem_chain_np(A: "ndarray[f64,2]", B: "ndarray[f64,2]",
+                  out: "ndarray[f64,2]", N: int):
+    out[0:N, 0:N] = A[0:N, 0:N] * B[0:N, 0:N]
+    out[0:N, 0:N] += A[0:N, 0:N] + B[0:N, 0:N]
+    out[0:N, 0:N] *= 0.5
+
+
+def elem_chain_ref(A, B, out, N):
+    out[:] = (A * B + A + B) * 0.5
+
+
+# ---------------------------------------------------------------------------
+# smooth: local intermediate contracted away + trailing RMW scale
+# ---------------------------------------------------------------------------
+
+def smooth_np(A: "ndarray[f64,2]", B: "ndarray[f64,2]",
+              out: "ndarray[f64,2]", N: int):
+    T = A[0:N, 0:N] + B[0:N, 0:N]
+    out[0:N, 0:N] = T[0:N, 0:N] * A[0:N, 0:N]
+    out[0:N, 0:N] *= 0.25
+
+
+def smooth_ref(A, B, out, N):
+    out[:] = (A + B) * A * 0.25
+
+
+# ---------------------------------------------------------------------------
+# scaled_sq: two chained local intermediates, both contracted
+# ---------------------------------------------------------------------------
+
+def scaled_sq_np(A: "ndarray[f64,2]", out: "ndarray[f64,2]", N: int):
+    T = A[0:N, 0:N] * A[0:N, 0:N]
+    U = T[0:N, 0:N] * 0.5
+    out[0:N, 0:N] = U[0:N, 0:N] + A[0:N, 0:N]
+
+
+def scaled_sq_ref(A, out, N):
+    out[:] = A * A * 0.5 + A
+
+
+# ---------------------------------------------------------------------------
+# vec_chain: long-vector RMW chain (BLAS-1 regime, pure memory bound)
+# ---------------------------------------------------------------------------
+
+def vec_chain_np(x: "ndarray[f64,1]", y: "ndarray[f64,1]",
+                 out: "ndarray[f64,1]", N: int):
+    out[0:N] = x[0:N] * y[0:N]
+    out[0:N] += x[0:N]
+    out[0:N] += y[0:N]
+    out[0:N] *= 0.125
+
+
+def vec_chain_ref(x, y, out, N):
+    out[:] = (x * y + x + y) * 0.125
+
+
+# ---------------------------------------------------------------------------
+# doitgen_local: per-iteration local temp contracted into the update
+# ---------------------------------------------------------------------------
+
+def doitgen_local_np(A: "ndarray[f64,3]", C4: "ndarray[f64,2]",
+                     NR: int, NQ: int, NP: int):
+    for r in range(0, NR):
+        for q in range(0, NQ):
+            w = np.dot(A[r, q, 0:NP], C4[0:NP, 0:NP])
+            A[r, q, 0:NP] = w[0:NP]
+
+
+def doitgen_local_ref(A, C4, NR, NQ, NP):
+    for r in range(NR):
+        for q in range(NQ):
+            A[r, q, :] = A[r, q, :] @ C4
+
+
+# ---------------------------------------------------------------------------
+# Registry (schema-compatible with polybench_kernels.KERNELS)
+# ---------------------------------------------------------------------------
+
+def _mk(shape, rng):
+    return rng.normal(size=shape)
+
+
+def _elem_chain_args(n, rng):
+    return [_mk((n, n), rng), _mk((n, n), rng), np.zeros((n, n)), n], \
+        {"out": [2]}
+
+
+def _smooth_args(n, rng):
+    return [_mk((n, n), rng), _mk((n, n), rng), np.zeros((n, n)), n], \
+        {"out": [2]}
+
+
+def _scaled_sq_args(n, rng):
+    return [_mk((n, n), rng), np.zeros((n, n)), n], {"out": [1]}
+
+
+def _vec_chain_args(n, rng):
+    m = n * n  # same byte volume as the 2-D chains
+    return [_mk((m,), rng), _mk((m,), rng), np.zeros(m), m], {"out": [2]}
+
+
+def _doitgen_local_args(n, rng):
+    nr, nq, npp = max(2, n // 8), max(2, n // 8), n
+    return [_mk((nr, nq, npp), rng), _mk((npp, npp), rng), nr, nq, npp], \
+        {"out": [0]}
+
+
+CHAINS = {
+    "elem_chain": {
+        "np": elem_chain_np, "ref": elem_chain_ref,
+        "make_args": _elem_chain_args, "flops": lambda n: 4.0 * n ** 2,
+    },
+    "smooth": {
+        "np": smooth_np, "ref": smooth_ref,
+        "make_args": _smooth_args, "flops": lambda n: 3.0 * n ** 2,
+    },
+    "scaled_sq": {
+        "np": scaled_sq_np, "ref": scaled_sq_ref,
+        "make_args": _scaled_sq_args, "flops": lambda n: 3.0 * n ** 2,
+    },
+    "vec_chain": {
+        "np": vec_chain_np, "ref": vec_chain_ref,
+        "make_args": _vec_chain_args, "flops": lambda n: 4.0 * n ** 2,
+    },
+    "doitgen_local": {
+        "np": doitgen_local_np, "ref": doitgen_local_ref,
+        "make_args": _doitgen_local_args,
+        "flops": lambda n: 2.0 * (n // 8) ** 2 * n ** 2,
+    },
+}

@@ -1,6 +1,8 @@
 """Benchmark driver — one function per paper table/figure.
 
   polybench   → paper Table 4 + Fig. 8 (15 kernels, 4 variants)
+  fusion      → fused vs unfused timings per kernel/backend
+                (machine-readable BENCH_fusion.json)
   stap        → paper Figs. 9-10 (throughput + scaling; cluster dimension
                 simulated, labeled)
   kernels     → Pallas kernel parity vs jnp oracles (interpret mode)
@@ -66,6 +68,9 @@ def main() -> None:
     from . import polybench
 
     polybench.run(n=192, list_n=32)
+
+    _section("fusion: fused vs unfused (BENCH_fusion.json)")
+    polybench.run_fusion()
 
     _section("stap (paper Figs 9-10)")
     from . import stap

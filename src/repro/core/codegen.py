@@ -26,7 +26,7 @@ from .raising import (EinsumSpec, Hull, MaskOperand, RaiseError, WritePlan,
 from .schedule import (FFTUnit, OpaqueUnit, PforUnit, RaisedUnit, Schedule,
                        SeqLoopUnit, Unit)
 from .scop import (CanonStmt, VAccess, VBin, VConst, VExpr, VParam, VReduce,
-                   VUnary)
+                   VUnary, substitute_array_reads, vexpr_accesses)
 
 
 class EmitError(Exception):
@@ -74,6 +74,10 @@ class EmitMeta:
     uses_pfor: bool = False
     pfor_count: int = 0
     raised_ops: List[str] = field(default_factory=list)
+    # copied from the schedule's fusion pass so cached variants carry
+    # their own telemetry (fused statements / contracted intermediates)
+    fused_units: int = 0
+    contracted_arrays: List[str] = field(default_factory=list)
 
 
 class Emitter:
@@ -429,12 +433,29 @@ class Emitter:
     def _emit_loops(self, stmt: CanonStmt) -> None:
         self.meta.jax_ok = False
         self.meta.raised_ops.append("loop-fallback")
+        rhs = normalize(stmt.rhs)
+        # A raised statement is atomic: the rhs is fully evaluated before
+        # the store. A scalar loop nest loses that when the rhs reads the
+        # written array at *other* elements (fusion builds such
+        # statements, e.g. A[...] = dot(A[...], C)), so snapshot the
+        # array and read the copy instead.
+        self_reads = [
+            acc for acc in vexpr_accesses(rhs)
+            if acc.array == stmt.write_array
+            and (len(acc.idx) != len(stmt.write_idx)
+                 or any(not ia.equals(iw)
+                        for ia, iw in zip(acc.idx, stmt.write_idx)))]
+        if self_reads:
+            snap = self.fresh("snap")
+            self.w(f"{snap} = xp.array({stmt.write_array})")
+            rhs = substitute_array_reads(
+                rhs, stmt.write_array,
+                lambda acc: VAccess(snap, acc.idx, acc.dtype))
         dims = self.free_dims(stmt)
         for d in dims:
             self.w(f"for {d.var} in range({affine_py(d.lower)}, "
                    f"{affine_py(d.upper)}, {d.step}):")
             self.depth += 1
-        rhs = normalize(stmt.rhs)
         expr = self._scalar_expr(rhs)
         comps = [affine_py(i) for i in stmt.write_idx]
         if stmt.write_full or stmt.write_is_temp or not comps:
@@ -640,6 +661,9 @@ def generate(sched: Schedule, backend: str) -> GeneratedVariant:
     fn = sched.program.fn
     param_names = [n for n, _ in fn.params]
     em = Emitter(sched, backend)
+    if sched.fusion is not None:
+        em.meta.fused_units = sched.fusion.fused_units
+        em.meta.contracted_arrays = list(sched.fusion.contracted_arrays)
 
     # Preamble: list→array conversion and shape symbols. Symbols for
     # arrays defined in the body are deferred until their definition.

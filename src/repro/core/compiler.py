@@ -94,6 +94,7 @@ def compile_kernel(
     fn: Callable,
     *,
     distribute: bool = True,
+    fuse: bool = True,
     runtime=None,
     tile: Optional[int] = None,
     workers: int = 4,
@@ -112,7 +113,8 @@ def compile_kernel(
     # (schedule shape included); runtime knobs (tile/workers/thresholds)
     # live in PforConfig / dispatch state rebuilt fresh on every load.
     backend_tag = ("np+jnp" if enable_jax else "np") \
-        + (":dist" if distribute else ":nodist")
+        + (":dist" if distribute else ":nodist") \
+        + (":fuse" if fuse else ":nofuse")
     src_h = type_sig = None
     if cache is not None:
         src_h = source_hash(fn)
@@ -127,7 +129,12 @@ def compile_kernel(
     t0 = time.perf_counter()
     tir_fn = parser.parse_function(fn, hint_overrides=hints)
     program = scop.extract(tir_fn)
-    sched = schedule_mod.schedule(program, distribute=distribute)
+    # Each backend gets the fusion profile that matches its memory
+    # behaviour: np mutates in place (contract temps, keep aug statements
+    # distributed as library calls); jnp materializes every statement
+    # (fuse everything legal so .at[].set copies disappear).
+    sched = schedule_mod.schedule(program, distribute=distribute, fuse=fuse,
+                                  fusion_profile="inplace")
 
     variants: Dict[str, Variant] = {
         "original": Variant("original", fn),
@@ -140,7 +147,11 @@ def compile_kernel(
     # Accelerator variant — all-or-nothing, like the paper's CuPy conversion
     if enable_jax and not sched.has_opaque and not sched.has_pfor:
         try:
-            gen_jnp = codegen.generate(sched, "jnp")
+            # with fusion off both profiles schedule identically
+            sched_fn = sched if not fuse else schedule_mod.schedule(
+                program, distribute=distribute, fuse=fuse,
+                fusion_profile="functional")
+            gen_jnp = codegen.generate(sched_fn, "jnp")
             v = _make_jnp_variant(gen_jnp)
             if v is not None:
                 variants["jnp"] = v
@@ -205,12 +216,15 @@ class ProfiledFunction:
 
     def __init__(self, fn: Callable, *, warmup: int = 8,
                  tracer: Optional[Tracer] = None,
-                 specializer=None, **compile_kw):
+                 specializer=None, calibrate: bool = True, **compile_kw):
         self.fn = fn
         self.warmup = max(1, warmup)
         self.tracer = tracer or Tracer()
         self.traced = self.tracer.wrap(fn)
         self.specializer = specializer
+        # calibrate the accelerator FLOP threshold from traced latencies
+        # unless the caller pinned an explicit threshold
+        self.calibrate = calibrate and "accel_threshold" not in compile_kw
         self.compile_kw = compile_kw
         self.compiled: Optional[CompiledKernel] = None
         self.tiers = None
@@ -241,9 +255,43 @@ class ProfiledFunction:
             hints = self.tiers[-1].hints
             self.compiled = compile_kernel(self.fn, hints=hints,
                                            **self.compile_kw)
+            if self.calibrate:
+                thr = self.calibrated_threshold()
+                if thr is not None:
+                    self.compiled.accel_threshold = thr
             if self.specializer is not None:
                 self.specializer.register(self.compiled)
         return self.compiled
+
+    def calibrated_threshold(self) -> Optional[float]:
+        """Per-machine accelerator threshold from the warmup trace.
+
+        The tracer timed the *original* function per signature; the
+        compiled schedule converts each signature's shapes/int params into
+        a FLOP estimate, and the roofline calibrator turns the measured
+        FLOP rate into the break-even point against the fixed dispatch
+        overhead. Returns None (→ keep the static default) when the trace
+        carries no usable sample."""
+        if self.compiled is None:
+            return None
+        samples = []
+        for rec in self.trace.signatures:
+            env: Dict[str, int] = {}
+            for o in rec.args:
+                if o.kind in ("array", "list") and o.shape:
+                    for d, s in enumerate(o.shape):
+                        env[f"{o.name}__d{d}"] = int(s)
+                elif o.ivalue is not None:
+                    env[o.name] = o.ivalue
+            try:
+                flops = cost.schedule_flops(self.compiled.sched, env)
+            except Exception:
+                continue
+            if rec.mean_s > 0 and flops > 0:
+                samples.append((flops, rec.mean_s))
+        if not samples:
+            return None
+        return cost.calibrate_accel_threshold(samples)
 
     def stats(self) -> Dict[str, object]:
         out: Dict[str, object] = {
@@ -258,15 +306,18 @@ class ProfiledFunction:
 
 def optimize(fn: Optional[Callable] = None, *, profile: bool = False,
              warmup: int = 8, tracer: Optional[Tracer] = None,
-             specializer=None, **kw):
+             specializer=None, calibrate: bool = True, **kw):
     """Decorator form of :func:`compile_kernel`.
 
     ``profile=True`` defers compilation behind a tracing phase so the
-    kernel needs no hand-written hints."""
+    kernel needs no hand-written hints (and, with ``calibrate=True``,
+    tunes the accelerator profitability threshold from the measured
+    warmup latencies)."""
     def build(f):
         if profile:
             return ProfiledFunction(f, warmup=warmup, tracer=tracer,
-                                    specializer=specializer, **kw)
+                                    specializer=specializer,
+                                    calibrate=calibrate, **kw)
         return compile_kernel(f, **kw)
 
     if fn is not None and callable(fn):

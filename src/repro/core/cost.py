@@ -145,6 +145,10 @@ def schedule_flops(sched: Schedule, env: Dict[str, int]) -> float:
 # (device transfer + dispatch overheads dominate below it).
 ACCEL_FLOP_THRESHOLD = 5e6
 
+# Per-call accelerator overhead (host→device transfer + dispatch) used to
+# calibrate the FLOP threshold from measured original-function latencies.
+ACCEL_DISPATCH_OVERHEAD_S = 2e-3
+
 # Distributing a pfor across workers is worth it above this much work.
 DISTRIBUTE_FLOP_THRESHOLD = 1e7
 
@@ -157,6 +161,78 @@ def accel_profitable(flops: float,
 def distribute_profitable(flops: float,
                           threshold: float = DISTRIBUTE_FLOP_THRESHOLD) -> bool:
     return flops >= threshold
+
+
+def calibrate_accel_threshold(
+    samples: Iterable[Tuple[float, float]],
+    default: float = ACCEL_FLOP_THRESHOLD,
+    overhead_s: float = ACCEL_DISPATCH_OVERHEAD_S,
+) -> float:
+    """Per-machine FLOP threshold from tracer-recorded latencies.
+
+    ``samples`` are ``(flops, seconds)`` pairs of the *original* function
+    (the tracer measures it during warmup). Accelerator dispatch pays off
+    once the non-accelerator alternative's runtime exceeds the fixed
+    dispatch overhead, so the break-even is ``overhead × FLOP rate``
+    (median across signatures). The measured rate of the interpreted
+    original is a *lower bound* on the optimized np variant's rate — the
+    variant the threshold actually arbitrates against — so the computed
+    break-even is a lower bound on the true one: calibration only ever
+    *raises* the threshold above the static default (a fast machine
+    covers more FLOPs inside the dispatch overhead), never lowers it.
+    Falls back to ``default`` when no usable trace exists; capped so one
+    wild timing cannot disable the accelerator entirely."""
+    rates = sorted(f / s for f, s in samples if f > 0 and s > 0)
+    if not rates:
+        return default
+    med = rates[len(rates) // 2]
+    thr = overhead_s * med
+    return min(max(thr, default), default * 64.0)
+
+
+# ---------------------------------------------------------------------------
+# Fusion profitability (core/fusion.py gate)
+# ---------------------------------------------------------------------------
+
+def fusion_profitable(points: float, producer_flops_pp: float, uses: int,
+                      dtype_bytes: int = 8,
+                      spec: ChipSpec = HOST_CPU) -> bool:
+    """Contract a producer's array into its consumers?
+
+    Roofline trade: contraction removes the intermediate's memory traffic
+    (one store plus one load per use) but re-evaluates the producer
+    expression at every extra use site. Fuse when the memory term saved
+    dominates the compute term added — i.e. exactly the paper-style
+    "memory-traffic dominates" condition. A single-use contraction adds no
+    compute and is always profitable."""
+    if uses <= 1:
+        return True
+    saved_bytes = (1 + uses) * points * dtype_bytes
+    extra_flops = (uses - 1) * producer_flops_pp * points
+    return extra_flops / spec.peak_flops <= saved_bytes / spec.hbm_bw
+
+
+def pow2_bucket(n: int) -> Tuple[int, int]:
+    """Enclosing power-of-two bucket (lo, hi], lo exclusive, hi inclusive.
+
+    4 → (2, 4]; 100 → (64, 128]; 1 → (0, 1]. Shared by the profiler's
+    hint tiers and the dispatcher's bucket-guard fast path."""
+    if n <= 1:
+        return (0, 1)
+    hi = 1
+    while hi < n:
+        hi <<= 1
+    return (hi >> 1, hi)
+
+
+def expr_flops_per_point(e, env: Optional[Dict[str, int]] = None) -> float:
+    """Public wrapper over the per-point FLOP estimator (fusion gate)."""
+    return _expr_flops_per_point(e, env or {})
+
+
+def domain_points(dims, env: Optional[Dict[str, int]] = None) -> float:
+    """Public wrapper over domain cardinality with nominal fallbacks."""
+    return _card(dims, env or {})
 
 
 # ---------------------------------------------------------------------------

@@ -1,6 +1,6 @@
 """Dependence analysis over canonical SCoP statements.
 
-Three client queries (all conservative — "maybe" means "assume dependence"):
+Client queries (all conservative — "maybe" means "assume dependence"):
 
   * ``accumulation_legal``  — can an explicit `w[f] += e` loop be converted
     to a reduction (the unification step that makes PolyBench List versions
@@ -11,6 +11,12 @@ Three client queries (all conservative — "maybe" means "assume dependence"):
     split into separate full-domain operations (paper §4.2: "applies loop
     distribution to split different library calls while maximizing the
     iteration domain … mapped to a single library function call")?
+  * ``absorption_write_legal`` — may a loop over `v` whose statement writes
+    `W[f(v,…)]` be vectorized into a full-domain op (requires that no rhs
+    read of W observes an element written by an *earlier* v-iteration)?
+  * ``fusion_legal``        — may two adjacent loops with identical domains
+    be merged into one (the fusion pass in core/fusion.py), i.e. no
+    dependence between the bodies at *different* iterations?
 
 Tests are GCD + Banerjee over the affine access functions extracted by
 core/scop.py, using iteration-domain bounds where they are constant.
@@ -139,6 +145,51 @@ def _provably_nonzero(diff: Affine, dim_of: Dict[str, LoopDim]) -> bool:
         if hi.is_constant() and hi.const < 0:
             return True
         return False
+
+
+def _provably_nonneg(diff: Affine, dim_of: Dict[str, LoopDim]) -> bool:
+    """Is diff >= 0 throughout the iteration space? Handles diff = u - i + c
+    where u is an iterator with lower bound i + d (so diff >= d + c)."""
+    if diff.is_constant():
+        return diff.const >= 0
+    vars_ = [v for v in diff.vars() if v in dim_of]
+    if len(vars_) != 1:
+        return False
+    u = vars_[0]
+    if diff.coeff(u) != 1:
+        return False
+    # diff >= lower(u) + (diff - u)
+    low = dim_of[u].lower + diff.drop([u])
+    return low.is_constant() and low.const >= 0
+
+
+def absorption_write_legal(stmt: CanonStmt, dim: LoopDim) -> bool:
+    """May the explicit loop over ``dim`` be folded into the statement's
+    domain when the write index uses the loop iterator?
+
+    Vectorizing evaluates the whole rhs before any element is stored, so
+    every rhs read of the written array must observe only elements written
+    by the *same or a later* iteration of ``dim`` (forward reads see the
+    original values either way; backward reads are a recurrence, e.g.
+    ``a[i] = a[i-1] * 2`` — the loop must stay explicit)."""
+    v = dim.var
+    dim_of = {d.var: d
+              for d in list(stmt.domain.dims) + list(stmt.reduce_dims())}
+    dim_of[v] = dim
+    for acc in vexpr_accesses(stmt.rhs):
+        if acc.array != stmt.write_array:
+            continue
+        if len(acc.idx) != len(stmt.write_idx):
+            return False
+        for ia, iw in zip(acc.idx, stmt.write_idx):
+            if iw.coeff(v) == 0 and ia.coeff(v) == 0:
+                # dimension independent of v: atomic within one iteration
+                continue
+            if iw.coeff(v) != 1:
+                return False
+            if not _provably_nonneg(ia - iw, dim_of):
+                return False
+    return True
 
 
 # ---------------------------------------------------------------------------
@@ -273,5 +324,44 @@ def distribution_legal(stmts: List[CanonStmt],
                         for vv, vr in rename.items())
                     if pinned and rename:
                         continue  # only same-iteration conflicts: forward
+                    return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Query 4: loop fusion legality (core/fusion.py)
+# ---------------------------------------------------------------------------
+
+def fusion_legal(before: List[CanonStmt], after: List[CanonStmt],
+                 shared_vars: List[str]) -> bool:
+    """May 'for v: before' followed by 'for v: after' (identical domains,
+    iterators already renamed to the shared names) be merged into a single
+    loop 'for v: before; after'?
+
+    Fusing makes iteration i of ``after`` run before iteration i' > i of
+    ``before``, and iteration i of ``before`` run before iteration i of
+    ``after`` (instead of after all of them). Banerjee gives no dependence
+    direction, so we conservatively require every cross-loop conflict on a
+    shared array to pin the *same* iteration of every shared var — those
+    dependences are preserved verbatim by fusion."""
+    bounds = _bounds_env(*(list(before) + list(after)))
+    rename = {vv: vv + "__p" for vv in shared_vars}
+    for vv, vr in rename.items():
+        bounds[vr] = bounds.get(vv, (None, None))
+    for s1 in before:
+        for s2 in after:
+            reads1, writes1 = _stmt_accesses(s1)
+            reads2, writes2 = _stmt_accesses(s2)
+            pairs = [(w, a) for w in writes1 for a in reads2 + writes2]
+            pairs += [(w, a) for w in writes2 for a in reads1 + writes1]
+            for w, a in pairs:
+                if w.array != a.array:
+                    continue
+                if not accesses_may_conflict(w, a, bounds, rename):
+                    continue
+                pinned = rename and all(
+                    _pins_same_iteration(w, a, vv, vr)
+                    for vv, vr in rename.items())
+                if not pinned:
                     return False
     return True

@@ -73,6 +73,11 @@ class CompiledKernel:
         self.last_decisions: Dict[Tuple, Tuple[str, float, bool]] = {}
         self.specializations: Dict[Tuple, Any] = {}
         self.spec_hits: int = 0
+        # bucket tier: pinned decisions also guard the enclosing
+        # power-of-two shape bucket, so mild shape drift (batch 60 ↔ 64)
+        # keeps the fast path instead of falling back to the full tree
+        self.bucket_specs: Dict[Tuple, Any] = {}
+        self.bucket_hits: int = 0
         self.from_cache: bool = False   # built from the persistent cache?
         self.__name__ = getattr(original, "__name__", "kernel")
         self.__doc__ = getattr(original, "__doc__", None)
@@ -113,6 +118,28 @@ class CompiledKernel:
             self._flop_cache[key] = cost.schedule_flops(
                 self.sched, dict(key))
         return self._flop_cache[key]
+
+    @staticmethod
+    def _bucket_sig(sig: Tuple) -> Tuple:
+        """Widen an exact signature to its power-of-two shape bucket.
+
+        Kind/dtype/rank survive verbatim (they decide legality — two
+        signatures in the same bucket are legality-identical); only the
+        extents are widened, so a pinned decision stays valid for every
+        signature the bucket admits, with the FLOP estimate off by at most
+        2× per dimension."""
+        parts = []
+        for part in sig:
+            name, dtype, extra = part
+            if isinstance(extra, tuple):
+                parts.append((name, dtype,
+                              tuple(cost.pow2_bucket(int(s))
+                                    for s in extra)))
+            elif dtype == "int" and isinstance(extra, int):
+                parts.append((name, dtype, cost.pow2_bucket(extra)))
+            else:
+                parts.append(part)
+        return tuple(parts)
 
     def _sig(self, bound: Dict[str, Any]) -> Tuple:
         """Exact call signature: (name, dtype, shape) per array param,
@@ -155,6 +182,16 @@ class CompiledKernel:
         bound = self._bind(args, kwargs)
         sig = self._sig(bound)
         spec = self.specializations.get(sig)
+        if spec is None:
+            # bucket tier: same dtype/rank, shape drifted within the
+            # enclosing pow2 bucket → replay the pinned decision anyway.
+            # Deliberately NOT recorded in last_decisions: a pin may only
+            # ever replay a decision the full tree made for that exact
+            # signature, and the borrowed one (FLOPs off by ≤2× per dim)
+            # must stay transient, not get promoted by the specializer.
+            spec = self.bucket_specs.get(self._bucket_sig(sig))
+            if spec is not None:
+                self.bucket_hits += 1
         if spec is not None:
             # hot path pinned by the specializer: replay the decision the
             # full tree made for this exact signature (legality included)
@@ -185,14 +222,21 @@ class CompiledKernel:
     # -- specialization hooks (repro.profiler.specializer) ---------------
     def install_specialization(self, spec) -> None:
         """Hot-swap a pinned decision into the tree. The original
-        function remains the fallback for every non-matching signature."""
+        function remains the fallback for every non-matching signature.
+        The same decision also guards the enclosing pow2 shape bucket."""
         self.specializations[spec.sig] = spec
+        self.bucket_specs[self._bucket_sig(spec.sig)] = spec
 
     def drop_specialization(self, sig: Tuple) -> None:
-        self.specializations.pop(sig, None)
+        spec = self.specializations.pop(sig, None)
+        if spec is not None:
+            bkey = self._bucket_sig(sig)
+            if self.bucket_specs.get(bkey) is spec:
+                self.bucket_specs.pop(bkey, None)
 
     def stats(self) -> Dict[str, Any]:
         """Dispatch/cache telemetry (consumed by serve.engine)."""
+        fusion = getattr(self.sched, "fusion", None)
         return {
             "calls": sum(v.calls for v in self.variants.values()),
             "variants": {
@@ -202,6 +246,11 @@ class CompiledKernel:
             "distinct_signatures": len(self.shape_counts),
             "specializations": len(self.specializations),
             "spec_hits": self.spec_hits,
+            "bucket_specs": len(self.bucket_specs),
+            "bucket_hits": self.bucket_hits,
+            "fused_units": getattr(fusion, "fused_units", 0),
+            "contracted_arrays": len(
+                getattr(fusion, "contracted_arrays", ()) or ()),
             "from_cache": self.from_cache,
         }
 
@@ -251,6 +300,12 @@ class CompiledKernel:
                      f"{[(n, t.kind, t.dtype, t.rank) for n, t in self.params]}")
         lines.append(f"    profitability: flops >= {self.accel_threshold:g}"
                      " → accelerator variant")
+        fusion = getattr(self.sched, "fusion", None)
+        if fusion is not None and (fusion.fused_units
+                                   or fusion.contracted_arrays):
+            lines.append(
+                f"  fusion: {fusion.fused_units} fused unit(s), "
+                f"contracted {list(fusion.contracted_arrays)}")
         for name, v in self.variants.items():
             ops = (v.generated.meta.raised_ops if v.generated else [])
             lines.append(f"  variant {name}: calls={v.calls} "

@@ -72,6 +72,9 @@ class Schedule:
     written: List[str] = field(default_factory=list)
     has_opaque: bool = False
     has_pfor: bool = False
+    # telemetry from the producer–consumer fusion pass (core/fusion.py);
+    # None when the pass was disabled or the entry predates it
+    fusion: Optional[object] = None
 
 
 # ---------------------------------------------------------------------------
@@ -105,7 +108,11 @@ def _absorb_loop(loop: LoopItem) -> Optional[List[CanonStmt]]:
             for d in list(s.domain.dims) + list(s.reduce_dims())
             for b in (d.lower, d.upper))
         if writes_use:
-            # v is an out iterator: prepend (outer-first domain order)
+            # v is an out iterator: prepend (outer-first domain order),
+            # unless the rhs reads elements the loop wrote at an earlier
+            # iteration (a recurrence — vectorizing would read stale data)
+            if not dependence.absorption_write_legal(s, loop.dim):
+                return None
             out.append(CanonStmt(
                 write_array=s.write_array, write_idx=s.write_idx,
                 domain=Domain((loop.dim,) + s.domain.dims),
@@ -187,15 +194,20 @@ def _written_arrays(units: List[Unit]) -> List[str]:
     return seen
 
 
-def schedule(program: ScopProgram, distribute: bool = True) -> Schedule:
+def schedule(program: ScopProgram, distribute: bool = True,
+             fuse: bool = True,
+             fusion_profile: str = "functional") -> Schedule:
     params = frozenset(n for n, _ in program.fn.params)
     units = _schedule_items(program.items, 0, distribute, params)
     sched = Schedule(program, units)
-    sched.written = _written_arrays(units)
+    if fuse:
+        from . import fusion  # deferred: fusion → cost → schedule
+        fusion.fuse(sched, profile=fusion_profile)
+    sched.written = _written_arrays(sched.units)
     sched.has_opaque = any(
-        isinstance(u, OpaqueUnit) for u in _flatten(units))
+        isinstance(u, OpaqueUnit) for u in _flatten(sched.units))
     sched.has_pfor = any(
-        isinstance(u, PforUnit) for u in _flatten(units))
+        isinstance(u, PforUnit) for u in _flatten(sched.units))
     return sched
 
 

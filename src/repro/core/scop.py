@@ -113,6 +113,23 @@ def vexpr_accesses(e: VExpr) -> List[VAccess]:
     return []
 
 
+def substitute_array_reads(e: VExpr, array: str, builder) -> VExpr:
+    """Replace every read of ``array`` with ``builder(access)`` (shared by
+    the fusion pass and the loop-fallback emitter)."""
+    if isinstance(e, VAccess):
+        return builder(e) if e.array == array else e
+    if isinstance(e, VBin):
+        return VBin(e.op, substitute_array_reads(e.left, array, builder),
+                    substitute_array_reads(e.right, array, builder))
+    if isinstance(e, VUnary):
+        return VUnary(e.fn, substitute_array_reads(e.operand, array,
+                                                   builder))
+    if isinstance(e, VReduce):
+        return VReduce(e.op, e.dims,
+                       substitute_array_reads(e.child, array, builder))
+    return e
+
+
 def substitute_vexpr(e: VExpr, env: Dict[str, Affine]) -> VExpr:
     if isinstance(e, VAccess):
         return VAccess(e.array, tuple(a.substitute(env) for a in e.idx),

@@ -54,11 +54,14 @@ class CacheStats:
     errors: int = 0
     # compiles that were skipped entirely thanks to a hit
     codegen_skipped: int = 0
+    # entries evicted by prune()/auto-prune
+    pruned: int = 0
 
     def as_dict(self) -> Dict[str, int]:
         return {"hits": self.hits, "misses": self.misses,
                 "puts": self.puts, "errors": self.errors,
-                "codegen_skipped": self.codegen_skipped}
+                "codegen_skipped": self.codegen_skipped,
+                "pruned": self.pruned}
 
 
 @dataclass
@@ -83,10 +86,15 @@ class VariantCache:
     the old process put — that is the whole point.
     """
 
-    def __init__(self, cache_dir: str):
+    def __init__(self, cache_dir: str, max_entries: Optional[int] = None,
+                 max_bytes: Optional[int] = None):
         self.cache_dir = os.path.abspath(os.path.expanduser(cache_dir))
         os.makedirs(self.cache_dir, exist_ok=True)
         self.stats = CacheStats()
+        # size caps enforced on put (LRU eviction); None = unbounded
+        self.max_entries = max_entries
+        self.max_bytes = max_bytes
+        self._puts_since_sweep = 0
 
     # -- paths ----------------------------------------------------------
     def _path(self, key: str) -> str:
@@ -113,6 +121,10 @@ class VariantCache:
                 pass
             return None
         self.stats.hits += 1
+        try:
+            os.utime(path, None)  # LRU touch: mtime = last use
+        except OSError:
+            pass
         return entry
 
     def put(self, entry: CacheEntry) -> str:
@@ -131,7 +143,29 @@ class VariantCache:
                 pass
             raise
         self.stats.puts += 1
+        self._auto_prune()
         return key
+
+    def _auto_prune(self) -> None:
+        """Enforce the constructor caps. Eviction goes 10% below the cap
+        so the stat() sweep amortizes over many puts instead of running
+        on every insertion once the store sits at capacity; a byte-only
+        cap (whose check itself needs the sweep) is polled every 16th
+        put rather than on each one."""
+        if self.max_entries is None and self.max_bytes is None:
+            return
+        self._puts_since_sweep += 1
+        if self.max_entries is not None:
+            over = len(self.entries()) > self.max_entries
+        else:
+            over = self._puts_since_sweep >= 16
+        if over:
+            self._puts_since_sweep = 0
+            self.prune(
+                max_entries=None if self.max_entries is None
+                else max(1, int(self.max_entries * 0.9)),
+                max_bytes=None if self.max_bytes is None
+                else max(1, int(self.max_bytes * 0.9)))
 
     # -- maintenance ----------------------------------------------------
     def entries(self) -> List[str]:
@@ -146,6 +180,74 @@ class VariantCache:
                 n += 1
         return n
 
+    def prune(self, max_entries: Optional[int] = None,
+              max_bytes: Optional[int] = None,
+              max_age_s: Optional[float] = None) -> int:
+        """LRU/size-cap eviction; returns the number of entries removed.
+
+        Ordering comes from the same timestamps ``index.json`` reports:
+        each entry's last-used time (file mtime, bumped on every hit by
+        :meth:`get`, falling back to ``created_at``). ``max_age_s`` drops
+        entries idle longer than the given age; ``max_entries`` /
+        ``max_bytes`` then evict least-recently-used entries until the
+        store fits. The sweep is stat()-based — entries are never
+        deserialized — and an existing ``index.json`` has the evicted
+        keys filtered out in place (a full metadata rebuild is
+        :meth:`dump_index`); auto-prune additionally evicts 10% below
+        the cap so this sweep amortizes across puts."""
+        infos = []
+        for key in self.entries():
+            path = self._path(key)
+            try:
+                st = os.stat(path)
+                infos.append((st.st_mtime, st.st_size, key, path))
+            except OSError:
+                continue
+        infos.sort()  # oldest last-use first
+        now = time.time()
+        drop = []
+        if max_age_s is not None:
+            drop.extend(i for i in infos if now - i[0] > max_age_s)
+        dropped = {i[2] for i in drop}
+        kept = [i for i in infos if i[2] not in dropped]
+        if max_entries is not None:
+            while len(kept) > max_entries:
+                drop.append(kept.pop(0))
+        if max_bytes is not None:
+            total = sum(i[1] for i in kept)
+            while kept and total > max_bytes:
+                victim = kept.pop(0)
+                total -= victim[1]
+                drop.append(victim)
+        removed = 0
+        dropped_keys = set()
+        for _, _, key, path in drop:
+            try:
+                os.unlink(path)
+                removed += 1
+                dropped_keys.add(key)
+            except OSError:
+                pass
+        if removed:
+            self.stats.pruned += removed
+            self._drop_from_index(dropped_keys)
+        return removed
+
+    def _drop_from_index(self, keys: set) -> None:
+        """Filter evicted keys out of an existing index.json (cheap; a
+        full rebuild with fresh metadata is :meth:`dump_index`)."""
+        path = os.path.join(self.cache_dir, "index.json")
+        if not os.path.exists(path):
+            return
+        try:
+            with open(path) as f:
+                idx = json.load(f)
+            idx = [e for e in idx if e.get("key") not in keys]
+            with open(path, "w") as f:
+                json.dump(idx, f, indent=2)
+        except Exception:
+            pass  # index is advisory; never break eviction over it
+
     def telemetry(self) -> Dict[str, Any]:
         return {"dir": self.cache_dir,
                 "entries": len(self.entries()),
@@ -156,12 +258,14 @@ class VariantCache:
         idx = []
         for key in self.entries():
             try:
-                with open(self._path(key), "rb") as f:
+                path = self._path(key)
+                with open(path, "rb") as f:
                     e = pickle.load(f)
                 idx.append({"key": key, "fn": e.fn_name,
                             "type_sig": e.type_sig, "backend": e.backend,
                             "compile_s": round(e.compile_s, 4),
-                            "created_at": e.created_at})
+                            "created_at": e.created_at,
+                            "last_used": os.stat(path).st_mtime})
             except Exception:
                 continue
         path = os.path.join(self.cache_dir, "index.json")

@@ -27,6 +27,10 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+# pow2_bucket is re-exported: callers grew up importing it from here, but
+# the implementation lives in core (the dispatcher's bucket guards must
+# not depend on the profiler package)
+from repro.core.cost import pow2_bucket  # noqa: F401  (re-export)
 from repro.core.types import promote_dtype
 
 from .tracer import ArgObservation, FunctionTrace
@@ -50,16 +54,6 @@ def _short(dtype: Optional[str]) -> str:
     return _SHORT_DTYPE.get(dtype, dtype)
 
 
-def pow2_bucket(n: int) -> Tuple[int, int]:
-    """Enclosing power-of-two bucket (lo, hi], lo exclusive, hi inclusive.
-
-    4 → (2, 4]; 100 → (64, 128]; 1 → (0, 1]."""
-    if n <= 1:
-        return (0, 1)
-    hi = 1
-    while hi < n:
-        hi <<= 1
-    return (hi >> 1, hi)
 
 
 @dataclass(frozen=True)

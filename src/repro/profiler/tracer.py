@@ -35,11 +35,16 @@ class ArgObservation:
     dtype: Optional[str]
     rank: int
     shape: Tuple[int, ...]         # () for scalars
+    # concrete value of integer scalars (structure parameters like N drive
+    # the cost model, so distinct values are distinct signatures and the
+    # profitability calibrator can recover per-call problem sizes)
+    ivalue: Optional[int] = None
 
     @staticmethod
     def of(name: str, value: Any) -> "ArgObservation":
         ti = runtime_typeinfo(value)
         shape: Tuple[int, ...] = ()
+        ivalue: Optional[int] = None
         if isinstance(value, np.ndarray):
             shape = tuple(int(s) for s in value.shape)
         elif hasattr(value, "shape") and not isinstance(value, (int, float)):
@@ -49,10 +54,15 @@ class ArgObservation:
                 shape = ()
         elif isinstance(value, list):
             shape = nested_list_shape(value)
-        return ArgObservation(name, ti.kind, ti.dtype, ti.rank, shape)
+        elif isinstance(value, (int, np.integer)) and not isinstance(
+                value, bool):
+            ivalue = int(value)
+        return ArgObservation(name, ti.kind, ti.dtype, ti.rank, shape,
+                              ivalue)
 
     def signature(self) -> Tuple:
-        return (self.name, self.kind, self.dtype, self.rank, self.shape)
+        return (self.name, self.kind, self.dtype, self.rank, self.shape,
+                self.ivalue)
 
 
 @dataclass

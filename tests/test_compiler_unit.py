@@ -114,12 +114,17 @@ def test_schedule_absorbs_matmul_loops():
                     C[i][j] += A[i][k] * B[k][j]
 
     fn = parser.parse_function(mm)
-    sched = schedule.schedule(scop.extract(fn))
+    sched = schedule.schedule(scop.extract(fn), fuse=False)
     # fully absorbed: no residual loops
     assert not any(isinstance(u, schedule.SeqLoopUnit) for u in
                    sched.units)
     assert len([u for u in sched.units
                 if isinstance(u, schedule.RaisedUnit)]) == 2
+    # the fusion pass then folds the zero-init into the accumulation
+    fused = schedule.schedule(scop.extract(parser.parse_function(mm)))
+    assert len([u for u in fused.units
+                if isinstance(u, schedule.RaisedUnit)]) == 1
+    assert fused.fusion.fused_units == 1
 
 
 def test_fft_is_materialization_point():

@@ -1,0 +1,436 @@
+"""Fusion pass tests: legality (illegal fusions rejected), numerical
+equivalence of fused vs unfused schedules on randomized inputs, array
+contraction, the backend cost-gate profiles, and the satellite features
+that ride with the pass (bucket dispatch, threshold calibration, cache
+pruning)."""
+
+import os
+import time
+
+import numpy as np
+import pytest
+
+from benchmarks.fusion_chains import CHAINS
+from benchmarks.polybench_kernels import KERNELS, clone_args, to_lists
+from repro.core import codegen, cost, parser, schedule, scop
+from repro.core.compiler import compile_kernel, optimize
+from repro.core.isl_lite import Affine, LoopDim
+from repro.core.schedule import RaisedUnit, SeqLoopUnit
+from repro.profiler.cache import CacheEntry, VariantCache
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _units(fn, fuse=True, profile="functional"):
+    tir_fn = parser.parse_function(fn)
+    return schedule.schedule(scop.extract(tir_fn), fuse=fuse,
+                             fusion_profile=profile)
+
+
+def _assert_variants_identical(fn, make_args, out_idx, n=17, seeds=(0, 1, 2),
+                               backends=("np",)):
+    """Fused and unfused compilations must agree bit-for-bit."""
+    ck_f = compile_kernel(fn, fuse=True)
+    ck_u = compile_kernel(fn, fuse=False)
+    for seed in seeds:
+        rng = np.random.default_rng(seed)
+        args, _ = make_args(n, rng)
+        for backend in backends:
+            if backend not in ck_f.variants or backend not in ck_u.variants:
+                continue
+            a_f, a_u = clone_args(args), clone_args(args)
+            ck_f.call_variant(backend, *a_f)
+            ck_u.call_variant(backend, *a_u)
+            for oi in out_idx:
+                np.testing.assert_array_equal(
+                    np.asarray(a_f[oi]), np.asarray(a_u[oi]),
+                    err_msg=f"{fn.__name__} backend={backend} seed={seed}")
+
+
+# ---------------------------------------------------------------------------
+# same-array flow fusion
+# ---------------------------------------------------------------------------
+
+def test_gemm_list_fuses_to_single_statement():
+    sched = _units(KERNELS["gemm"]["list"])
+    raised = [u for u in sched.units if isinstance(u, RaisedUnit)]
+    assert len(raised) == 1
+    assert sched.fusion.fused_units == 1
+    # the fused statement is exactly the hand-written NumPy form
+    src = codegen.generate(sched, "np").source
+    assert "*=" not in src and "+=" not in src
+
+
+def test_inplace_profile_keeps_aug_statements():
+    # on the np profile `C *= beta; C += …` stays distributed (in-place
+    # library calls beat an expression + slice store)…
+    sched = _units(KERNELS["gemm"]["list"], profile="inplace")
+    raised = [u for u in sched.units if isinstance(u, RaisedUnit)]
+    assert len(raised) == 2
+    # …but a constant fill still folds: tmp = 0; tmp += dot → tmp = dot
+    sched2 = _units(KERNELS["2mm"]["list"], profile="inplace")
+    assert sched2.fusion.fused_units == 1
+
+
+def test_fusion_polybench_chains_bit_identical():
+    for name in ("gemm", "2mm", "3mm", "atax", "bicg", "gesummv"):
+        k = KERNELS[name]
+        _assert_variants_identical(k["list"], k["make_args"], k_out(name),
+                                   backends=("np", "jnp"))
+
+
+def k_out(name):
+    rng = np.random.default_rng(0)
+    _, meta = KERNELS[name]["make_args"](4, rng)
+    return meta["out"]
+
+
+def test_fusion_chain_kernels_bit_identical():
+    for name, k in CHAINS.items():
+        rng = np.random.default_rng(0)
+        _, meta = k["make_args"](8, rng)
+        _assert_variants_identical(k["np"], k["make_args"], meta["out"],
+                                   backends=("np", "jnp"))
+
+
+def test_fused_matches_reference():
+    for name, k in CHAINS.items():
+        rng = np.random.default_rng(42)
+        args, meta = k["make_args"](12, rng)
+        ref_args = clone_args(args)
+        k["ref"](*ref_args)
+        ck = compile_kernel(k["np"], fuse=True)
+        got = clone_args(args)
+        ck.call_variant("np", *got)
+        for oi in meta["out"]:
+            np.testing.assert_allclose(np.asarray(got[oi]),
+                                       np.asarray(ref_args[oi]),
+                                       atol=1e-10, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# array contraction
+# ---------------------------------------------------------------------------
+
+def test_contraction_eliminates_local_temp():
+    k = CHAINS["smooth"]
+    ck = compile_kernel(k["np"], fuse=True)
+    src = ck.source("np")
+    assert "T" not in [ln.split(" =")[0].strip()
+                       for ln in src.splitlines()]
+    meta = ck.variants["np"].generated.meta
+    assert "T" in meta.contracted_arrays
+
+
+def test_contraction_inside_loop_body():
+    k = CHAINS["doitgen_local"]
+    ck = compile_kernel(k["np"], fuse=True)
+    assert "w" in ck.variants["np"].generated.meta.contracted_arrays
+    assert "w = " not in ck.source("np")
+
+
+def test_contraction_rejected_for_nested_reduction():
+    def keeps_library_calls(A: "ndarray[f64,2]", x: "ndarray[f64,1]",
+                            out: "ndarray[f64,1]", N: int):
+        T = np.dot(A[0:N, 0:N], A[0:N, 0:N])
+        out[0:N] = np.dot(T[0:N, 0:N], x[0:N])
+
+    ck = compile_kernel(keeps_library_calls, fuse=True)
+    # substituting the dot into the second contraction would nest
+    # reductions and break einsum raising: keep both library calls
+    assert ck.sched.fusion.contracted_arrays == []
+    assert ck.sched.fusion.rejected >= 1
+    assert "T = " in ck.source("np")
+
+
+def test_contraction_rejected_by_cost_gate_on_reuse():
+    def expensive_twice(A: "ndarray[f64,2]", B: "ndarray[f64,2]",
+                        out: "ndarray[f64,2]", N: int):
+        T = np.dot(A[0:N, 0:N], B[0:N, 0:N])
+        out[0:N, 0:N] = T[0:N, 0:N] * T[0:N, 0:N]
+
+    ck = compile_kernel(expensive_twice, fuse=True)
+    # two uses of an O(N³) producer: the roofline gate keeps the single
+    # library call instead of computing the matmul twice
+    assert ck.sched.fusion.contracted_arrays == []
+    assert "T = " in ck.source("np")
+    # a cheap elementwise producer IS duplicated (memory term dominates)
+    assert cost.fusion_profitable(1e6, producer_flops_pp=1.0, uses=2)
+    assert not cost.fusion_profitable(1e6, producer_flops_pp=512.0, uses=3)
+
+
+# ---------------------------------------------------------------------------
+# legality: illegal fusions must be rejected
+# ---------------------------------------------------------------------------
+
+def test_recurrence_not_vectorized():
+    # reduction-carried dependence: vectorizing would read stale values
+    def seq(a: "ndarray[f64,1]", N: int):
+        for i in range(1, N):
+            a[i] = a[i - 1] * 2.0
+
+    sched = _units(seq)
+    assert any(isinstance(u, SeqLoopUnit) for u in sched.units)
+    ck = compile_kernel(seq, fuse=True)
+    a = np.ones(9)
+    want = a.copy()
+    for i in range(1, 9):
+        want[i] = want[i - 1] * 2.0
+    ck.call_variant("np", a, 9)
+    np.testing.assert_array_equal(a, want)
+
+
+def test_forward_self_read_still_vectorizes():
+    # forward reads observe original values either way → absorb is legal
+    def fwd(a: "ndarray[f64,1]", N: int):
+        for i in range(0, N - 1):
+            a[i] = a[i + 1] * 2.0
+
+    sched = _units(fwd)
+    assert not any(isinstance(u, SeqLoopUnit) for u in sched.units)
+    ck = compile_kernel(fwd, fuse=True)
+    a = np.arange(8.0)
+    want = a.copy()
+    for i in range(0, 7):
+        want[i] = want[i + 1] * 2.0
+    ck.call_variant("np", a, 8)
+    np.testing.assert_array_equal(a, want)
+
+
+def test_anti_dependence_blocks_flow_fusion():
+    # the consumer reads W at a *different* element than it writes: the
+    # producer's store must stay visible, so no fusion
+    def antidep(w: "ndarray[f64,1]", x: "ndarray[f64,1]", N: int):
+        w[0:N] = x[0:N] * 2.0
+        w[0:N] += w[N - 1] * np.ones(N)[0:N]
+
+    sched = _units(antidep)
+    raised = [u for u in sched.units if isinstance(u, RaisedUnit)]
+    assert len(raised) >= 2 or sched.fusion.fused_units == 0
+
+
+def test_aug_consumer_self_read_gets_producer_value():
+    # `out = a+1; out += out*2` — the consumer's *explicit* read of out
+    # must see the producer's value, not the pre-producer array
+    def self_read(a: "ndarray[f64,1]", out: "ndarray[f64,1]", N: int):
+        out[0:N] = a[0:N] + 1.0
+        out[0:N] += out[0:N] * 2.0
+
+    sched = _units(self_read, profile="functional")
+    assert sched.fusion.fused_units == 1
+    ck_f = compile_kernel(self_read, fuse=True)
+    a = np.arange(4.0)
+    for backend in [b for b in ("np", "jnp") if b in ck_f.variants]:
+        out = np.zeros(4)
+        ck_f.call_variant(backend, a, out, 4)
+        np.testing.assert_allclose(out, (a + 1.0) * 3.0)
+
+
+def test_interleaved_writer_blocks_fusion():
+    # a unit between producer and consumer writes the producer's input:
+    # folding the producer past it would read the wrong values
+    def interleaved(a: "ndarray[f64,1]", b: "ndarray[f64,1]", N: int):
+        b[0:N] = a[0:N] * 2.0
+        a[0:N] = a[0:N] + 1.0
+        b[0:N] += a[0:N]
+
+    ck_f = compile_kernel(interleaved, fuse=True)
+    ck_u = compile_kernel(interleaved, fuse=False)
+    rng = np.random.default_rng(5)
+    a = rng.normal(size=6)
+    b = np.zeros(6)
+    af, bf = a.copy(), b.copy()
+    au, bu = a.copy(), b.copy()
+    ck_f.call_variant("np", af, bf, 6)
+    ck_u.call_variant("np", au, bu, 6)
+    np.testing.assert_array_equal(bf, bu)
+    np.testing.assert_array_equal(af, au)
+
+
+# ---------------------------------------------------------------------------
+# loop fusion
+# ---------------------------------------------------------------------------
+
+def test_adjacent_recurrence_loops_fuse():
+    def two_loops(a: "ndarray[f64,1]", b: "ndarray[f64,1]", N: int):
+        for i in range(1, N):
+            a[i] = a[i - 1] + 1.0
+        for i in range(1, N):
+            b[i] = b[i - 1] * 2.0
+
+    sched = _units(two_loops)
+    loops = [u for u in sched.units if isinstance(u, SeqLoopUnit)]
+    assert len(loops) == 1
+    assert sched.fusion.loops_fused == 1
+    ck = compile_kernel(two_loops, fuse=True)
+    a, b = np.zeros(7), np.ones(7)
+    wa, wb = a.copy(), b.copy()
+    for i in range(1, 7):
+        wa[i] = wa[i - 1] + 1.0
+    for i in range(1, 7):
+        wb[i] = wb[i - 1] * 2.0
+    ck.call_variant("np", a, b, 7)
+    np.testing.assert_array_equal(a, wa)
+    np.testing.assert_array_equal(b, wb)
+
+
+def test_loop_fusion_rejected_on_cross_iteration_dependence():
+    # the second loop reads a[] at a different iteration: merging would
+    # observe partially-updated values
+    def cross(a: "ndarray[f64,1]", b: "ndarray[f64,1]", N: int):
+        for i in range(1, N):
+            a[i] = a[i - 1] + 1.0
+        for i in range(1, N):
+            b[i] = b[i - 1] + a[N - i]
+
+    sched = _units(cross)
+    loops = [u for u in sched.units if isinstance(u, SeqLoopUnit)]
+    assert len(loops) == 2
+    ck_f = compile_kernel(cross, fuse=True)
+    ck_u = compile_kernel(cross, fuse=False)
+    a0 = np.zeros(9)
+    b0 = np.zeros(9)
+    af, bf, au, bu = a0.copy(), b0.copy(), a0.copy(), b0.copy()
+    ck_f.call_variant("np", af, bf, 9)
+    ck_u.call_variant("np", au, bu, 9)
+    np.testing.assert_array_equal(bf, bu)
+
+
+# ---------------------------------------------------------------------------
+# loop-fallback atomicity (codegen snapshot)
+# ---------------------------------------------------------------------------
+
+def test_loop_fallback_snapshots_self_reads():
+    from repro.core.scop import CanonStmt, VAccess
+
+    n = 8
+    i = LoopDim("i", Affine.constant(0), Affine.constant(n))
+    # a[i] = a[N-1-i]: the reversed (coeff -1) access defeats slice
+    # raising → loop fallback, which must read a pre-statement snapshot
+    stmt = CanonStmt(
+        write_array="a", write_idx=(Affine.var("i"),),
+        domain=scop.Domain((i,)),
+        rhs=VAccess("a", (Affine.constant(n - 1) - Affine.var("i"),)))
+    em = codegen.Emitter(None, "np")  # schedule unused by emit_raised
+    em.emit_raised(codegen.RaisedUnit(stmt))
+    assert "loop-fallback" in em.meta.raised_ops
+    src = "def f(a):\n" + "\n".join(em.lines) + "\n"
+    ns = {"xp": np}
+    exec(compile(src, "<test>", "exec"), ns)
+    a = np.arange(float(n))
+    ns["f"](a)
+    np.testing.assert_array_equal(a, np.arange(float(n))[::-1])
+
+
+# ---------------------------------------------------------------------------
+# telemetry + cache keying
+# ---------------------------------------------------------------------------
+
+def test_stats_expose_fusion_counters():
+    ck = compile_kernel(CHAINS["smooth"]["np"], fuse=True)
+    st = ck.stats()
+    assert st["contracted_arrays"] == 1
+    assert st["fused_units"] >= 1
+    assert "bucket_hits" in st and "bucket_specs" in st
+
+
+def test_cache_key_distinguishes_fusion(tmp_path):
+    cache = VariantCache(str(tmp_path))
+    fn = CHAINS["smooth"]["np"]
+    compile_kernel(fn, fuse=True, cache=cache)
+    compile_kernel(fn, fuse=False, cache=cache)
+    assert len(cache.entries()) == 2  # distinct keys, no collision
+    ck = compile_kernel(fn, fuse=True, cache=cache)
+    assert ck.from_cache
+
+
+# ---------------------------------------------------------------------------
+# profile-guided threshold calibration
+# ---------------------------------------------------------------------------
+
+def test_calibrate_accel_threshold():
+    default = cost.ACCEL_FLOP_THRESHOLD
+    assert cost.calibrate_accel_threshold([]) == default
+    # 1e9 flops in 10ms → 1e11 flop/s → threshold = 2ms × 1e11 = 2e8
+    thr = cost.calibrate_accel_threshold([(1e9, 1e-2)])
+    assert thr == pytest.approx(2e8)
+    # a slow *original* must never lower the threshold below the static
+    # default (its rate underestimates the np variant the threshold
+    # actually arbitrates against)
+    lo = cost.calibrate_accel_threshold([(1.0, 1e6)])
+    assert lo == default
+    hi = cost.calibrate_accel_threshold([(1e15, 1e-9)])
+    assert hi == pytest.approx(default * 64)
+
+
+def test_profiled_function_calibrates_threshold():
+    def addmul(a: "ndarray[f64,1]", b: "ndarray[f64,1]", N: int):
+        a[0:N] = a[0:N] + b[0:N] * 2.0
+
+    pf = optimize(profile=True, warmup=3, enable_jax=False)(addmul)
+    rng = np.random.default_rng(0)
+    a, b = rng.normal(size=64), rng.normal(size=64)
+    for _ in range(4):
+        pf(a.copy(), b, 64)
+    assert pf.compiled is not None
+    d = cost.ACCEL_FLOP_THRESHOLD
+    assert d <= pf.compiled.accel_threshold <= d * 64
+
+    # explicit threshold wins over calibration
+    pf2 = optimize(profile=True, warmup=2, enable_jax=False,
+                   accel_threshold=123.0)(addmul)
+    for _ in range(3):
+        pf2(a.copy(), b, 64)
+    assert pf2.compiled.accel_threshold == 123.0
+
+
+# ---------------------------------------------------------------------------
+# variant-cache pruning
+# ---------------------------------------------------------------------------
+
+def _entry(tag):
+    return CacheEntry(fn_name=f"k{tag}", src_hash=f"h{tag}",
+                      type_sig="a:int[None,None]", backend="np",
+                      params=[], sched=None, generated={})
+
+
+def test_cache_prune_lru(tmp_path):
+    cache = VariantCache(str(tmp_path))
+    for tag in range(5):
+        cache.put(_entry(tag))
+        time.sleep(0.01)
+    cache.dump_index()
+    # touch entry 0 so it becomes most-recently-used
+    assert cache.get("h0", "a:int[None,None]", "np") is not None
+    removed = cache.prune(max_entries=2)
+    assert removed == 3
+    assert cache.stats.pruned == 3
+    assert len(cache.entries()) == 2
+    # the touched entry survived LRU eviction
+    assert cache.get("h0", "a:int[None,None]", "np") is not None
+    assert cache.get("h1", "a:int[None,None]", "np") is None
+    # evicted keys were filtered out of index.json (no rebuild needed)
+    import json
+    idx = json.load(open(os.path.join(str(tmp_path), "index.json")))
+    assert len(idx) == 2
+    assert {e["fn"] for e in idx} == {"k0", "k4"}
+    assert all("last_used" in e for e in idx)
+
+
+def test_cache_prune_age_and_autocap(tmp_path):
+    cache = VariantCache(str(tmp_path))
+    for tag in range(3):
+        cache.put(_entry(tag))
+    old = os.path.join(str(tmp_path), cache.entries()[0] + ".pkl")
+    past = time.time() - 3600
+    os.utime(old, (past, past))
+    assert cache.prune(max_age_s=600) == 1
+    assert len(cache.entries()) == 2
+    # auto-prune on put keeps the store within max_entries
+    capped = VariantCache(str(tmp_path / "capped"), max_entries=2)
+    for tag in range(4):
+        capped.put(_entry(tag))
+        time.sleep(0.01)
+    assert len(capped.entries()) == 2

@@ -324,14 +324,25 @@ def test_specializer_promotes_hot_signature_and_stays_correct():
     ck(C, A, B, 1.0, 1.0, n, n, n)
     np.testing.assert_allclose(C, ref, atol=1e-8)
     assert ck.spec_hits == 1
-    # a *different* shape bypasses the specialization and walks the tree
+    # mild shape drift inside the same pow2 bucket (6 and 8 are both in
+    # (4, 8]) keeps the pinned fast path via the bucket tier
     m = 6
     C0b, Ab, Bb = _gemm_args(m, seed=12)
     Cb = C0b.copy()
     ck(Cb, Ab, Bb, 1.0, 1.0, m, m, m)
     np.testing.assert_allclose(Cb, _gemm_ref(C0b, Ab, Bb, 1.0, 1.0),
                                atol=1e-8)
-    assert ck.spec_hits == 1                # unchanged
+    assert ck.bucket_hits == 1
+    assert ck.spec_hits == 2
+    # a shape *outside* the bucket bypasses both tiers and walks the tree
+    m = 16
+    C0c, Ac, Bc = _gemm_args(m, seed=13)
+    Cc = C0c.copy()
+    ck(Cc, Ac, Bc, 1.0, 1.0, m, m, m)
+    np.testing.assert_allclose(Cc, _gemm_ref(C0c, Ac, Bc, 1.0, 1.0),
+                               atol=1e-8)
+    assert ck.bucket_hits == 1              # unchanged
+    assert ck.spec_hits == 2                # unchanged
     assert sp.telemetry()["promotions"] == 1
 
 
