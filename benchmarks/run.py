@@ -77,6 +77,9 @@ def main() -> None:
 
     stap.run()
 
+    _section("stap distributed: cluster runtime (BENCH_distrib.json)")
+    stap.run_distrib()
+
     _section("pallas kernels (interpret-mode parity)")
     bench_kernels()
 

@@ -128,8 +128,95 @@ def run(csv: bool = True) -> List[Dict]:
     return rows
 
 
+def run_distrib(smoke: bool = False, out_path: str = "BENCH_distrib.json"
+                ) -> List[Dict]:
+    """Adaptive STAP (examples/stap.py) on the multi-process cluster
+    runtime: sequential vs 1-process vs N-process, measured — no
+    simulated dimension. Writes ``BENCH_distrib.json``."""
+    import json
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from examples.stap import (ALPHA, ITERS, LOADING, make_stap_data,
+                               stap_adaptive, stap_seq)
+    from repro.core.compiler import compile_kernel
+    from repro.distrib import ClusterRuntime
+
+    if smoke:
+        gates, k, dof, iters = 16, 16, 16, 30
+    else:
+        gates, k, dof, iters = 96, 64, 64, ITERS
+    snap, train, steer, out = make_stap_data(gates, k, dof)
+
+    reps = 1 if smoke else 3   # best-of-N: the container is noisy
+
+    rows: List[Dict] = []
+    out_ref = out.copy()
+    t_seq = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        stap_seq(snap, train, steer, out_ref, gates, k, dof, iters,
+                 ALPHA, LOADING)
+        t_seq = min(t_seq, time.perf_counter() - t0)
+    rows.append({"variant": "sequential_numpy", "workers": 0,
+                 "wall_s": round(t_seq, 5),
+                 "gates_per_s": round(gates / t_seq, 2),
+                 "speedup_vs_seq": 1.0, "measured": True})
+
+    for workers in ((1, 2) if smoke else (1, 2, 4)):
+        rt = ClusterRuntime(workers=workers)
+        try:
+            ck = compile_kernel(stap_adaptive, runtime=rt,
+                                workers=workers)
+            ck.pfor_config.distribute_threshold = 0
+            out_a = out.copy()
+            ck.call_variant("np", snap, train, steer, out_a, gates, k,
+                            dof, iters, ALPHA, LOADING)  # warm workers
+            t_n = float("inf")
+            for _ in range(reps):
+                out_a = out.copy()
+                t0 = time.perf_counter()
+                ck.call_variant("np", snap, train, steer, out_a, gates,
+                                k, dof, iters, ALPHA, LOADING)
+                t_n = min(t_n, time.perf_counter() - t0)
+            err = float(abs(out_a - out_ref).max())
+            assert err < 1e-8, f"distributed STAP mismatch: {err:.2e}"
+            st = rt.stats()
+            rows.append({
+                "variant": "cluster", "workers": workers,
+                "wall_s": round(t_n, 5),
+                "gates_per_s": round(gates / t_n, 2),
+                "speedup_vs_seq": round(t_seq / t_n, 3),
+                "max_abs_err": err, "measured": True,
+                "chunks": st["chunks_dispatched"],
+                "bytes_shipped": st["bytes_shipped"],
+                "profiles_gflops": [p.gflops for p in rt.profiles()],
+            })
+        finally:
+            rt.shutdown()
+
+    doc = {"workload": "stap_adaptive",
+           "shape": {"gates": gates, "k_train": k, "dof": dof,
+                     "iters": iters},
+           "smoke": smoke, "rows": rows}
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2)
+    for r in rows:
+        print(f"stap_distrib.{r['variant']},workers={r['workers']},"
+              f"{r['gates_per_s']}_gates_per_s,"
+              f"x{r['speedup_vs_seq']}", flush=True)
+    print(f"stap_distrib.written,{out_path}")
+    return rows
+
+
 def main():
-    run()
+    import sys
+
+    if "--distrib" in sys.argv:
+        run_distrib(smoke="--smoke" in sys.argv)
+    else:
+        run()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,152 @@
+"""Space-Time Adaptive Processing on the multi-process cluster runtime —
+the paper's flagship workload (§5.3, the 20,000×-on-24-nodes result)
+carried end to end through this repo's stack:
+
+  sequential Python  →  optimize()  →  pfor over range gates
+                     →  ClusterRuntime: chunks on worker *processes*,
+                        placement by measured device profile,
+                        disjoint writes gathered on the head.
+
+The pipeline per range gate is the textbook adaptive chain the paper
+runs on Summit:
+
+  1. **covariance estimation** — sample covariance of the gate's K
+     training snapshots, ``R = Tᵀ T / K`` (+ diagonal loading δ for
+     conditioning);
+  2. **weight solve** — the MVDR weights ``w = (R + δI)⁻¹ s`` via a
+     fixed-iteration Richardson solve (``w ← w + α(s − Rw − δw)``) so
+     the whole solve stays inside the compiler's raisable subset — no
+     opaque ``linalg.solve`` call to block parallelization;
+  3. **beamforming** — project the gate's snapshot onto the adapted
+     weights, ``y[g] = wᵀ x[g]``.
+
+Gates are independent, so the compiler proves the gate loop dependence-
+free (w and R privatize per iteration), emits a ``pfor``, and the
+cluster runtime shards it across OS processes.
+
+    PYTHONPATH=src python examples/stap.py [workers]
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+import time
+
+import numpy as np
+
+from repro.core.compiler import optimize
+from repro.distrib import ClusterRuntime
+
+# Scaled-down problem (the paper's full size is 24 GB/cube): enough
+# gates × work per gate that process-level parallelism pays on 2 cores.
+GATES = 96
+K_TRAIN = 64         # training snapshots per gate
+DOF = 64             # adaptive degrees of freedom (channels × taps)
+ITERS = 800          # Richardson steps (fixed count keeps it affine)
+ALPHA = 0.15         # Richardson step size (< 2/λmax after loading)
+LOADING = 2.0        # diagonal loading δ
+
+
+def stap_adaptive(snap: "ndarray[f64,2]", train: "ndarray[f64,3]",
+                  steer: "ndarray[f64,1]", outY: "ndarray[f64,1]",
+                  numGates: int, K: int, dof: int, iters: int,
+                  alpha: float, loading: float):
+    """The kernel handed to ``optimize()`` — sequential NumPy as a user
+    would write it; the gate loop is discovered as pfor."""
+    for g in range(0, numGates):
+        R = np.dot(train[g, 0:K, 0:dof].T, train[g, 0:K, 0:dof])
+        for i in range(0, dof):
+            for j in range(0, dof):
+                R[i, j] = R[i, j] / K
+        w = alpha * steer[0:dof]
+        for it in range(0, iters):
+            r = steer[0:dof] - np.dot(R[0:dof, 0:dof], w[0:dof]) \
+                - loading * w[0:dof]
+            w = w + alpha * r[0:dof]
+        outY[g] = np.dot(w[0:dof], snap[g, 0:dof])
+
+
+def stap_seq(snap, train, steer, outY, numGates, K, dof, iters,
+             alpha, loading):
+    """Plain-NumPy sequential reference (same math, library idiom)."""
+    for g in range(numGates):
+        T = train[g]
+        R = T.T @ T / K
+        w = alpha * steer.copy()
+        for _ in range(iters):
+            w = w + alpha * (steer - R @ w - loading * w)
+        outY[g] = w @ snap[g]
+
+
+def make_stap_data(gates: int = GATES, k: int = K_TRAIN, dof: int = DOF,
+                   seed: int = 7):
+    rng = np.random.default_rng(seed)
+    train = rng.normal(size=(gates, k, dof))
+    snap = rng.normal(size=(gates, dof))
+    steer = rng.normal(size=dof)
+    out = np.zeros(gates)
+    return snap, train, steer, out
+
+
+def main(workers: int = 2) -> None:
+    snap, train, steer, out = make_stap_data()
+
+    out_ref = out.copy()
+    stap_seq(snap, train, steer, out_ref, GATES, K_TRAIN, DOF, ITERS,
+             ALPHA, LOADING)   # warm BLAS before timing
+    t0 = time.perf_counter()
+    stap_seq(snap, train, steer, out_ref, GATES, K_TRAIN, DOF, ITERS,
+             ALPHA, LOADING)
+    t_seq = time.perf_counter() - t0
+    print(f"[stap] sequential reference: {t_seq:.3f}s "
+          f"({GATES / t_seq:.1f} gates/s)")
+
+    rt = ClusterRuntime(workers=workers)
+    try:
+        profs = [(p.wid, p.gflops, p.transport_mbs)
+                 for p in rt.profiles()]
+        print(f"[stap] fleet device profiles (wid, GFLOP/s, MB/s): "
+              f"{profs}")
+        ck = optimize(runtime=rt, workers=workers)(stap_adaptive)
+        ck.pfor_config.distribute_threshold = 0  # force the cluster tier
+        print("[stap] generated distributed code:")
+        print(ck.source("np"))
+
+        out_got = out.copy()
+        ck.call_variant("np", snap, train, steer, out_got, GATES,
+                        K_TRAIN, DOF, ITERS, ALPHA, LOADING)  # warm
+        out_got = out.copy()
+        t0 = time.perf_counter()
+        ck.call_variant("np", snap, train, steer, out_got, GATES,
+                        K_TRAIN, DOF, ITERS, ALPHA, LOADING)
+        t_dist = time.perf_counter() - t0
+        err = np.abs(out_got - out_ref).max()
+        assert err < 1e-8, f"cluster STAP mismatch: {err:.2e}"
+        print(f"[stap] cluster ({workers} worker processes): "
+              f"{t_dist:.3f}s ({GATES / t_dist:.1f} gates/s, "
+              f"{t_seq / t_dist:.2f}x vs sequential), "
+              f"max|err| {err:.1e}")
+
+        # fault-tolerance drill: kill a worker process mid-run
+        import threading
+        killer = threading.Timer(0.05, rt.kill_worker)
+        out_ft = out.copy()
+        killer.start()
+        ck.call_variant("np", snap, train, steer, out_ft, GATES,
+                        K_TRAIN, DOF, ITERS, ALPHA, LOADING)
+        killer.cancel()
+        err = np.abs(out_ft - out_ref).max()
+        assert err < 1e-8, f"post-kill STAP mismatch: {err:.2e}"
+        st = rt.stats()
+        print(f"[stap] worker-kill drill OK (max|err| {err:.1e}); "
+              f"deaths={st['worker_deaths']} resubmits={st['resubmits']} "
+              f"replays={st['lineage_replays']}")
+        print(f"[stap] runtime telemetry: {st}")
+    finally:
+        rt.shutdown()
+
+
+if __name__ == "__main__":
+    main(int(sys.argv[1]) if len(sys.argv) > 1 else 2)

@@ -135,6 +135,9 @@ def compile_kernel(
     # (fuse everything legal so .at[].set copies disappear).
     sched = schedule_mod.schedule(program, distribute=distribute, fuse=fuse,
                                   fusion_profile="inplace")
+    # the cluster runtime diffs only schedule-written arrays when
+    # gathering pfor chunk results from worker processes
+    pfor_cfg.written = tuple(sched.written)
 
     variants: Dict[str, Variant] = {
         "original": Variant("original", fn),
@@ -181,6 +184,7 @@ def _rebuild_from_entry(fn: Callable, entry: CacheEntry,
                         accel_threshold: float) -> Optional[CompiledKernel]:
     """Warm start: dispatcher from stored source, no front-end work."""
     try:
+        pfor_cfg.written = tuple(getattr(entry.sched, "written", ()) or ())
         variants: Dict[str, Variant] = {
             "original": Variant("original", fn),
         }

@@ -152,6 +152,14 @@ ACCEL_DISPATCH_OVERHEAD_S = 2e-3
 # Distributing a pfor across workers is worth it above this much work.
 DISTRIBUTE_FLOP_THRESHOLD = 1e7
 
+# Fixed per-task cost of dispatching one chunk to a worker process
+# (serialize + pipe + schedule); measured on the container's pipes.
+CLUSTER_TASK_OVERHEAD_S = 1.5e-3
+
+# Conservative pipe/socket bandwidth fallback when the runtime has no
+# measured transport number yet.
+CLUSTER_TRANSPORT_MBS = 400.0
+
 
 def accel_profitable(flops: float,
                      threshold: float = ACCEL_FLOP_THRESHOLD) -> bool:
@@ -161,6 +169,40 @@ def accel_profitable(flops: float,
 def distribute_profitable(flops: float,
                           threshold: float = DISTRIBUTE_FLOP_THRESHOLD) -> bool:
     return flops >= threshold
+
+
+def cluster_distribute_profitable(
+    flops: float,
+    payload_bytes: float,
+    profiles: Iterable,
+    n_chunks: int = 1,
+    local_gflops: float = 1.0,
+    overhead_s: float = CLUSTER_TASK_OVERHEAD_S,
+) -> bool:
+    """Local-vs-distributed decision from measured device profiles.
+
+    The paper's threshold expression generalized to a two-sided time
+    estimate: run on the head at its measured FLOP rate, or ship the
+    closure payload over the measured transport, burn a fixed dispatch
+    overhead per chunk, and compute at the fleet's *aggregate* measured
+    rate. Distribution wins only when the estimated distributed wall
+    time (transfer + dispatch + compute) beats local execution — so a
+    fleet of slow workers behind a thin pipe correctly loses to a fast
+    head for small kernels, and per-worker heterogeneity is captured by
+    summing each profile's own rate."""
+    profiles = list(profiles)
+    if not profiles:
+        return False
+    t_local = flops / max(1e-9, local_gflops * 1e9)
+    agg_gflops = sum(max(1e-3, p.gflops) for p in profiles)
+    mbs = [p.transport_mbs for p in profiles if p.transport_mbs > 0]
+    transport_bs = (min(mbs) if mbs else CLUSTER_TRANSPORT_MBS) * 1e6
+    # dispatch is serial on the head (one send per chunk), so the
+    # per-chunk overhead does NOT amortize across workers
+    t_dist = (flops / (agg_gflops * 1e9)
+              + len(profiles) * payload_bytes / max(1.0, transport_bs)
+              + overhead_s * max(1, n_chunks))
+    return t_dist < t_local
 
 
 def calibrate_accel_threshold(
@@ -194,14 +236,33 @@ def calibrate_accel_threshold(
 # Fusion profitability (core/fusion.py gate)
 # ---------------------------------------------------------------------------
 
+# Allocator cost model for parallel temporaries (per backend). A fused
+# producer whose array is contracted away also skips one allocation of
+# ``points × dtype_bytes``; on the np backend that allocation is a malloc
+# plus first-touch page faults (disproportionately expensive for large
+# temps — the `elem_chain` np-vs-jnp anomaly in BENCH_fusion.json), while
+# jnp's arena allocator amortizes it almost entirely.
+ALLOC_BASE_S = {"np": 2e-6, "jnp": 5e-7}
+ALLOC_BW = {"np": 8e9, "jnp": 80e9}   # first-touch bytes/s
+
+
+def alloc_cost_s(backend: str, nbytes: float) -> float:
+    """Seconds to materialize one fresh temp of ``nbytes`` on ``backend``."""
+    base = ALLOC_BASE_S.get(backend, ALLOC_BASE_S["np"])
+    bw = ALLOC_BW.get(backend, ALLOC_BW["np"])
+    return base + nbytes / bw
+
+
 def fusion_profitable(points: float, producer_flops_pp: float, uses: int,
                       dtype_bytes: int = 8,
-                      spec: ChipSpec = HOST_CPU) -> bool:
+                      spec: ChipSpec = HOST_CPU,
+                      backend: str = "np") -> bool:
     """Contract a producer's array into its consumers?
 
     Roofline trade: contraction removes the intermediate's memory traffic
-    (one store plus one load per use) but re-evaluates the producer
-    expression at every extra use site. Fuse when the memory term saved
+    (one store plus one load per use) *and* its allocation (the
+    per-backend ``alloc_cost_s`` term), but re-evaluates the producer
+    expression at every extra use site. Fuse when the time saved
     dominates the compute term added — i.e. exactly the paper-style
     "memory-traffic dominates" condition. A single-use contraction adds no
     compute and is always profitable."""
@@ -209,7 +270,9 @@ def fusion_profitable(points: float, producer_flops_pp: float, uses: int,
         return True
     saved_bytes = (1 + uses) * points * dtype_bytes
     extra_flops = (uses - 1) * producer_flops_pp * points
-    return extra_flops / spec.peak_flops <= saved_bytes / spec.hbm_bw
+    saved_s = (saved_bytes / spec.hbm_bw
+               + alloc_cost_s(backend, points * dtype_bytes))
+    return extra_flops / spec.peak_flops <= saved_s
 
 
 def pow2_bucket(n: int) -> Tuple[int, int]:

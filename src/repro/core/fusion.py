@@ -287,7 +287,9 @@ def _try_flow_fuse(p: CanonStmt, c: CanonStmt,
         pts = cost.domain_points(list(c.domain.dims))
         pflops = cost.expr_flops_per_point(value)
         occurrences = uses + (1 if c.aug is not None else 0)
-        if not cost.fusion_profitable(pts, pflops, occurrences):
+        if not cost.fusion_profitable(
+                pts, pflops, occurrences,
+                backend=_profile_backend(profile)):
             return None
         new_c_rhs = substitute_array_reads(c.rhs, c.write_array,
                                            lambda acc: value)
@@ -386,8 +388,15 @@ def _has_reduce(e: VExpr) -> bool:
     return False
 
 
+def _profile_backend(profile: str) -> str:
+    """The cost-model backend a fusion profile arbitrates for (the
+    per-backend ``alloc_cost`` term prices the eliminated temp)."""
+    return "np" if profile == "inplace" else "jnp"
+
+
 def _try_contract(units: List[Unit], root: List[Unit],
-                  params: frozenset, stats: FusionStats) -> bool:
+                  params: frozenset, stats: FusionStats,
+                  profile: str) -> bool:
     for i, pu in enumerate(units):
         if not isinstance(pu, RaisedUnit):
             continue
@@ -440,13 +449,14 @@ def _try_contract(units: List[Unit], root: List[Unit],
                 outside = True
         if outside:
             continue
-        if _contract_into(units, i, pu, readers, stats):
+        if _contract_into(units, i, pu, readers, stats, profile):
             return True
     return False
 
 
 def _contract_into(units: List[Unit], i: int, pu: RaisedUnit,
-                   readers: List[RaisedUnit], stats: FusionStats) -> bool:
+                   readers: List[RaisedUnit], stats: FusionStats,
+                   profile: str) -> bool:
     p = pu.stmt
     t = p.write_array
     p_has_reduce = _has_reduce(p.rhs)
@@ -463,7 +473,8 @@ def _contract_into(units: List[Unit], i: int, pu: RaisedUnit,
                 return False
     pts = cost.domain_points(list(p.domain.dims))
     pflops = cost.expr_flops_per_point(p.rhs)
-    if not cost.fusion_profitable(pts, pflops, uses):
+    if not cost.fusion_profitable(pts, pflops, uses,
+                                  backend=_profile_backend(profile)):
         stats.rejected += 1
         return False
     # interference: between the producer and each reader no sibling may
@@ -567,7 +578,8 @@ def _fuse_level(units: List[Unit], root: List[Unit], params: frozenset,
     while changed:
         changed = (_loop_fuse_pass(units, stats)
                    or _flow_fuse_pass(units, stats, profile)
-                   or _try_contract(units, root, params, stats))
+                   or _try_contract(units, root, params, stats,
+                                    profile))
         if changed:
             # merged loop bodies expose new intra-body opportunities
             for u in units:

@@ -73,6 +73,10 @@ class CompiledKernel:
         self.last_decisions: Dict[Tuple, Tuple[str, float, bool]] = {}
         self.specializations: Dict[Tuple, Any] = {}
         self.spec_hits: int = 0
+        # per-signature latency EMAs: tree-dispatched calls vs pinned
+        # calls — the specializer's demotion sweep compares them to spot
+        # regressions (a pin whose decision went stale)
+        self.tree_latency: Dict[Tuple, float] = {}
         # bucket tier: pinned decisions also guard the enclosing
         # power-of-two shape bucket, so mild shape drift (batch 60 ↔ 64)
         # keeps the fast path instead of falling back to the full tree
@@ -181,6 +185,7 @@ class CompiledKernel:
     def __call__(self, *args, **kwargs):
         bound = self._bind(args, kwargs)
         sig = self._sig(bound)
+        bucket_hit = False
         spec = self.specializations.get(sig)
         if spec is None:
             # bucket tier: same dtype/rank, shape drifted within the
@@ -192,6 +197,7 @@ class CompiledKernel:
             spec = self.bucket_specs.get(self._bucket_sig(sig))
             if spec is not None:
                 self.bucket_hits += 1
+                bucket_hit = True
         if spec is not None:
             # hot path pinned by the specializer: replay the decision the
             # full tree made for this exact signature (legality included)
@@ -215,8 +221,21 @@ class CompiledKernel:
             self.pfor_config.estimated_flops = rec.flops
         t0 = time.perf_counter()
         out = self._invoke(variant, bound)
+        dt = time.perf_counter() - t0
         variant.calls += 1
-        variant.total_s += time.perf_counter() - t0
+        variant.total_s += dt
+        if spec is not None:
+            # bucket-tier calls run a *different* shape (up to 2x per
+            # dim) — folding their latency into the pin's EMA would fake
+            # a regression against the exact-shape tree baseline
+            if not bucket_hit:
+                ema = getattr(spec, "latency_ema", None)
+                spec.latency_ema = (dt if ema is None
+                                    else 0.8 * ema + 0.2 * dt)
+        elif sig in self.shape_counts:
+            ema = self.tree_latency.get(sig)
+            self.tree_latency[sig] = (dt if ema is None
+                                      else 0.8 * ema + 0.2 * dt)
         return out
 
     # -- specialization hooks (repro.profiler.specializer) ---------------

@@ -8,17 +8,24 @@ Backends (a profitability decision, §4.3):
   * sequential      — one call; chosen for small iteration counts;
   * raylite DAG     — chunks submitted as tasks to the runtime/ package
     (the Ray analogue): futures, lineage fault tolerance, straggler
-    duplicates all apply.
+    duplicates all apply;
+  * cluster shards  — when the bound runtime is a
+    :class:`repro.distrib.ClusterRuntime` (it exposes ``pfor_shards``),
+    chunks cross OS-process boundaries: the body closure ships to worker
+    processes, chunk sizes follow measured device capability, and
+    disjoint-region writes gather back on the head. The local-vs-
+    distributed call is made per kernel from the fleet's device profiles
+    (:func:`repro.core.cost.cluster_distribute_profitable`).
 
 The SPMD (shard_map) mapping of regular pfor loops lives in the LM planner
-(core/planner.py) — numeric kernels distribute via the DAG, matching the
-paper's Ray deployment.
+(core/planner.py) — numeric kernels distribute via the DAG or the cluster
+runtime, matching the paper's Ray deployment.
 """
 
 from __future__ import annotations
 
 import math
-from typing import Callable, Optional
+from typing import Callable, Optional, Tuple
 
 
 class PforConfig:
@@ -26,13 +33,16 @@ class PforConfig:
 
     def __init__(self, runtime=None, tile: Optional[int] = None,
                  workers: int = 4, force_sequential: bool = False):
-        self.runtime = runtime          # runtime.tasks.TaskRuntime or None
+        self.runtime = runtime          # TaskRuntime | ClusterRuntime | None
         self.tile = tile
         self.workers = workers
         self.force_sequential = force_sequential
         # filled per call by the dispatcher (profitability input):
         self.estimated_flops = 0.0
         self.distribute_threshold = 1e7
+        # arrays the schedule writes (set by the compiler) — lets the
+        # cluster runtime diff only real outputs when gathering chunks
+        self.written: Tuple[str, ...] = ()
 
     def make_runner(self) -> Callable:
         def __pfor_run(body, lo, hi, tile):
@@ -42,13 +52,36 @@ class PforConfig:
             tile_ = tile or self.tile
             if tile_ is None:
                 tile_ = max(1, math.ceil(n / max(1, self.workers)))
-            seq = (
-                self.force_sequential
-                or self.runtime is None
-                or n <= 1
-                or self.estimated_flops < self.distribute_threshold
-            )
-            if seq:
+            if self.force_sequential or self.runtime is None or n <= 1:
+                body(lo, hi)
+                return
+            shards = getattr(self.runtime, "pfor_shards", None)
+            if shards is not None:
+                # a cluster runtime instance exists, so repro.distrib is
+                # already imported — the shared sizing rule is free here
+                from repro.distrib.serial import payload_nbytes
+
+                # cluster tier: ask the device-profile cost model unless
+                # the caller forced distribution (threshold <= 0)
+                distribute = self.distribute_threshold <= 0
+                if not distribute:
+                    decide = getattr(self.runtime,
+                                     "distribute_profitable", None)
+                    if decide is not None:
+                        distribute = decide(
+                            self.estimated_flops,
+                            payload_nbytes(body),
+                            max(1, math.ceil(n / tile_)))
+                    else:
+                        distribute = (self.estimated_flops
+                                      >= self.distribute_threshold)
+                if distribute:
+                    shards(body, lo, hi, tile or self.tile,
+                           written=self.written)
+                else:
+                    body(lo, hi)
+                return
+            if self.estimated_flops < self.distribute_threshold:
                 body(lo, hi)
                 return
             futures = []

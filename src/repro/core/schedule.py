@@ -129,9 +129,14 @@ def _absorb_loop(loop: LoopItem) -> Optional[List[CanonStmt]]:
             else:
                 return None  # last-value / recurrence: keep loop explicit
         else:
-            if s.aug is None:
+            reads_own_write = any(
+                acc.array == s.write_array
+                for acc in vexpr_accesses(s.rhs))
+            if s.aug is None and not reads_own_write:
                 out.append(s)  # loop-invariant: hoist (LICM)
             else:
+                # aug or self-read: a recurrence independent of v —
+                # executing it once is not executing it N times
                 return None
 
     # Distribution legality: absorbing executes all iterations of each

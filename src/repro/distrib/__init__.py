@@ -1,0 +1,37 @@
+"""Multi-process cluster runtime (the paper's Ray deployment tier, §4.3).
+
+raylite (:mod:`repro.runtime`) models a cluster with threads inside one
+process; this package crosses real OS-process boundaries:
+
+  * a **head** scheduler (:class:`ClusterRuntime`) spawns worker
+    *processes* and talks to them over pipes (``multiprocessing``
+    transport — same framing a socket transport would use);
+  * each worker measures a **device profile** at startup (CPU count,
+    memory, matmul GFLOP/s, memory bandwidth, GPU presence) that feeds a
+    **placement-aware scheduler** with data-locality affinity;
+  * a serialized **object plane**: results live where they were produced
+    (ObjectRef ownership), move on demand, and survive worker-process
+    death via lineage replay;
+  * ``pfor`` loops compiled by :func:`repro.core.compiler.optimize`
+    shard dependence-free chunks across workers — chunk sizes
+    proportional to measured capability — with disjoint-region writes
+    gathered on the head.
+
+    from repro.distrib import ClusterRuntime
+    rt = ClusterRuntime(workers=4)
+    ck = compile_kernel(stap_kernel, runtime=rt)   # pfor → processes
+    ref = rt.submit(fn, *args)                     # or raw DAG tasks
+    rt.get(ref)
+"""
+
+from .cluster import ClusterRuntime, ClusterTaskError
+from .device import DeviceProfile, measure_profile
+from .objects import ClusterRef, ObjectMeta, ObjectPlane, TaskSpec
+from .placement import PlacementScheduler, PlacementWeights, WorkerView
+from .serial import dumps_fn, loads_fn
+
+__all__ = [
+    "ClusterRuntime", "ClusterTaskError", "ClusterRef", "DeviceProfile",
+    "ObjectMeta", "ObjectPlane", "PlacementScheduler", "PlacementWeights",
+    "TaskSpec", "WorkerView", "dumps_fn", "loads_fn", "measure_profile",
+]

@@ -1,0 +1,742 @@
+"""ClusterRuntime: head scheduler over spawned worker processes.
+
+The multi-process generalization of :class:`repro.runtime.tasks.
+TaskRuntime` (raylite). Same duck-typed surface the compiled kernels
+use — ``submit`` / ``get`` / ``wait`` / ``stats`` — plus the
+``pfor_shards`` protocol :mod:`repro.core.pfor` dispatches to when its
+runtime crosses process boundaries:
+
+  * workers are real OS processes (``multiprocessing`` transport, fork
+    or spawn), each reporting a measured :class:`DeviceProfile`;
+  * placement goes through :class:`PlacementScheduler` — capability +
+    data-locality − load — and pfor chunks are sized proportional to
+    each worker's measured GFLOP/s (heterogeneous fleets get uneven,
+    balanced-by-time chunks);
+  * the object plane keeps results where they were produced and moves
+    them on demand; every task's serialized spec is its lineage record,
+    so objects lost to a worker-process death are replayed on the
+    survivors (``kill_worker`` + ``get`` is the recovery drill);
+  * ``cache_dir`` points the runtime at a (shareable) variant-cache
+    directory so a fleet of runtimes warm-starts compilation from one
+    store (:meth:`compile`).
+"""
+
+from __future__ import annotations
+
+import itertools
+import multiprocessing as mp
+import os
+import signal
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .device import DeviceProfile, measure_profile
+from .objects import (HEAD, LOST, REMOTE, ClusterRef, ObjectPlane,
+                      TaskSpec)
+from .placement import PlacementScheduler, PlacementWeights, WorkerView
+from .serial import closure_arrays, dumps_fn
+
+
+class ClusterTaskError(RuntimeError):
+    pass
+
+
+@dataclass
+class _TaskErr:
+    message: str
+    traceback: str = ""
+
+    def __str__(self) -> str:
+        return self.message
+
+
+@dataclass
+class _TaskState:
+    spec: TaskSpec
+    wid: Optional[int] = None
+    finished: bool = False
+    error: Optional[str] = None
+    event: threading.Event = field(default_factory=threading.Event)
+
+
+class _WorkerHandle:
+    def __init__(self, wid: int, proc, conn):
+        self.wid = wid
+        self.proc = proc
+        self.conn = conn
+        self.profile: Optional[DeviceProfile] = None
+        self.hello = threading.Event()
+        self.alive = True
+        self.draining = False   # clean scale-down, not a failure
+        self.inflight: set = set()
+        self.blobs: set = set()
+        self.send_lock = threading.Lock()
+
+    def send(self, msg) -> None:
+        with self.send_lock:
+            self.conn.send(msg)
+
+
+class ClusterRuntime:
+    """Head process of the multi-process cluster."""
+
+    def __init__(self, workers: int = 2, *,
+                 start_method: Optional[str] = None,
+                 max_attempts: int = 3,
+                 respawn: bool = True,
+                 cache_dir: Optional[str] = None,
+                 weights: PlacementWeights = PlacementWeights(),
+                 hello_timeout_s: float = 30.0):
+        if start_method is None:
+            start_method = ("fork" if "fork" in mp.get_all_start_methods()
+                            else "spawn")
+        self._ctx = mp.get_context(start_method)
+        self.start_method = start_method
+        self.max_attempts = max_attempts
+        self.respawn = respawn
+        self.plane = ObjectPlane()
+        self.scheduler = PlacementScheduler(weights)
+        self._lock = threading.Lock()
+        self._handles: Dict[int, _WorkerHandle] = {}
+        self._tasks: Dict[int, _TaskState] = {}
+        self._producer: Dict[int, int] = {}     # oid → producing task
+        self._task_ids = itertools.count(1)
+        self._wids = itertools.count(0)
+        self._blob_ids = itertools.count(1)
+        self._blobs: Dict[int, bytes] = {}
+        self._fetch_events: Dict[int, threading.Event] = {}
+        self._pongs: Dict[int, "threading.Event"] = {}
+        self._shutdown = False
+        # telemetry
+        self.replays = 0
+        self.resubmits = 0
+        self.worker_deaths = 0
+        self.pfor_runs = 0
+        self.chunks_dispatched = 0
+        self.bytes_shipped = 0
+        # head-local capability (the "stay local" side of profitability)
+        self.local_profile = measure_profile(-1)
+        self.variant_cache = None
+        if cache_dir is not None:
+            from repro.profiler.cache import VariantCache
+            self.variant_cache = VariantCache(cache_dir)
+        for _ in range(workers):
+            self._spawn_worker()
+        self._await_hellos(hello_timeout_s)
+        self._reprofile_sequentially()
+        self._measure_transport()
+
+    # -- worker lifecycle -------------------------------------------------
+    def _spawn_worker(self) -> _WorkerHandle:
+        from .worker import worker_main
+        wid = next(self._wids)
+        head_conn, worker_conn = self._ctx.Pipe(duplex=True)
+        proc = self._ctx.Process(target=worker_main,
+                                 args=(worker_conn, wid),
+                                 name=f"cluster-worker-{wid}",
+                                 daemon=True)
+        proc.start()
+        worker_conn.close()  # child's end lives in the child now
+        wh = _WorkerHandle(wid, proc, head_conn)
+        with self._lock:
+            self._handles[wid] = wh
+        t = threading.Thread(target=self._recv_loop, args=(wh,),
+                             name=f"cluster-recv-{wid}", daemon=True)
+        t.start()
+        return wh
+
+    def _await_hellos(self, timeout_s: float) -> None:
+        deadline = time.time() + timeout_s
+        with self._lock:
+            handles = list(self._handles.values())
+        for wh in handles:
+            if not wh.hello.wait(max(0.1, deadline - time.time())):
+                raise TimeoutError(
+                    f"worker {wh.wid} never said hello")
+
+    def _reprofile_sequentially(self) -> None:
+        """Startup hellos carry profiles measured while every worker was
+        booting at once — on a small host they contend and under-report.
+        Re-measure one worker at a time for honest capability weights."""
+        with self._lock:
+            handles = [wh for wh in self._handles.values() if wh.alive]
+        for wh in handles:
+            self._reprofile(wh)
+
+    def _reprofile(self, wh: _WorkerHandle) -> None:
+        wh.hello.clear()
+        try:
+            wh.send(("profile",))
+        except OSError:
+            return
+        wh.hello.wait(10.0)
+
+    def _measure_transport(self, nbytes: int = 1 << 20) -> None:
+        with self._lock:
+            handles = [wh for wh in self._handles.values() if wh.alive]
+        for wh in handles:
+            self._ping_transport(wh, nbytes)
+
+    def _ping_transport(self, wh: _WorkerHandle,
+                        nbytes: int = 1 << 20) -> None:
+        payload = b"\0" * nbytes
+        ev = threading.Event()
+        self._pongs[wh.wid] = ev
+        t0 = time.perf_counter()
+        try:
+            wh.send(("ping", payload))
+        except OSError:
+            self._pongs.pop(wh.wid, None)
+            return
+        if ev.wait(5.0) and wh.profile is not None:
+            dt = max(1e-9, time.perf_counter() - t0)
+            # the payload travels one way (the pong is a few bytes), so
+            # dt covers ~nbytes of transfer plus one scheduling round
+            # trip — credit nbytes/dt, a slight *under*estimate
+            wh.profile.transport_mbs = round(nbytes / dt / 1e6, 1)
+        self._pongs.pop(wh.wid, None)
+
+    def _recv_loop(self, wh: _WorkerHandle) -> None:
+        while True:
+            try:
+                msg = wh.conn.recv()
+            except (EOFError, OSError):
+                break
+            try:
+                self._handle(wh, msg)
+            except Exception:
+                pass  # a malformed message must not kill the receiver
+        self._on_worker_death(wh)
+
+    def _handle(self, wh: _WorkerHandle, msg) -> None:
+        kind = msg[0]
+        if kind == "hello":
+            wh.profile = DeviceProfile.from_dict(msg[1])
+            wh.hello.set()
+        elif kind == "done":
+            _, tid, oid, nbytes, payload = msg
+            if payload is not None:
+                self.plane.fulfill_inline(oid, payload[1])
+            else:
+                self.plane.fulfill_remote(oid, wh.wid, nbytes)
+            with self._lock:
+                ts = self._tasks.get(tid)
+                wh.inflight.discard(tid)
+            if ts is not None:
+                ts.finished = True
+                ts.event.set()
+        elif kind == "err":
+            _, tid, message, tb = msg
+            with self._lock:
+                ts = self._tasks.get(tid)
+                wh.inflight.discard(tid)
+            if ts is None:
+                return
+            ts.spec.attempts += 1
+            if ts.spec.attempts < self.max_attempts and not self._shutdown:
+                self.resubmits += 1
+                threading.Thread(target=self._dispatch, args=(ts,),
+                                 daemon=True).start()
+            else:
+                ts.error = message
+                self.plane.fulfill_inline(ts.spec.out.oid,
+                                          _TaskErr(message, tb))
+                ts.finished = True
+                ts.event.set()
+        elif kind == "obj":
+            _, oid, payload = msg
+            if payload is not None:
+                self.plane.promote(oid, payload[1])
+                try:
+                    # ownership moved here; the worker's copy would
+                    # never be read again (the head now serves it)
+                    wh.send(("free", oid))
+                except OSError:
+                    pass
+            ev = self._fetch_events.pop(oid, None)
+            if ev is not None:
+                ev.set()
+        elif kind == "pong":
+            ev = self._pongs.get(wh.wid)
+            if ev is not None:
+                ev.set()
+
+    def _on_worker_death(self, wh: _WorkerHandle) -> None:
+        with self._lock:
+            if not wh.alive:
+                return
+            wh.alive = False
+            self._handles.pop(wh.wid, None)
+            inflight = list(wh.inflight)
+            wh.inflight.clear()
+            clean = self._shutdown or wh.draining
+        try:
+            wh.conn.close()
+        except OSError:
+            pass
+        if clean:
+            return
+        self.worker_deaths += 1
+        self.plane.mark_worker_lost(wh.wid)
+        if self.respawn:
+            nw = self._spawn_worker()
+            if nw.hello.wait(10.0):
+                # the boot-time probe may have contended with whatever
+                # killed its predecessor: re-measure like at startup so
+                # chunk weights and profitability stay honest
+                self._reprofile(nw)
+                self._ping_transport(nw)
+        # in-flight tasks died with the process: resubmit on survivors
+        for tid in inflight:
+            with self._lock:
+                ts = self._tasks.get(tid)
+            if ts is None or ts.finished:
+                continue
+            ts.spec.attempts += 1
+            if ts.spec.attempts >= self.max_attempts:
+                ts.error = f"worker {wh.wid} died; attempts exhausted"
+                self.plane.fulfill_inline(ts.spec.out.oid,
+                                          _TaskErr(ts.error))
+                ts.finished = True
+                ts.event.set()
+                continue
+            self.resubmits += 1
+            threading.Thread(target=self._dispatch, args=(ts,),
+                             daemon=True).start()
+
+    # -- placement + dispatch ---------------------------------------------
+    def _views(self) -> List[WorkerView]:
+        with self._lock:
+            handles = [wh for wh in self._handles.values()
+                       if wh.alive and wh.profile is not None]
+            return [WorkerView(wh.wid, wh.profile, len(wh.inflight),
+                               self.plane.resident_on(wh.wid))
+                    for wh in handles]
+
+    def _handle_for(self, wid: int) -> Optional[_WorkerHandle]:
+        with self._lock:
+            return self._handles.get(wid)
+
+    def _ensure_arg_ready(self, ref: ClusterRef,
+                          timeout: Optional[float] = 60.0) -> None:
+        deadline = None if timeout is None else time.time() + timeout
+        while True:
+            meta = self.plane.meta(ref.oid)
+            if meta.state in (HEAD, REMOTE):
+                return
+            if meta.state == LOST:
+                self._replay(ref.oid)
+            self.plane.wait_ready(ref.oid, 0.05)
+            if deadline is not None and time.time() > deadline:
+                raise TimeoutError(f"arg {ref} never became ready")
+
+    def _dispatch(self, ts: _TaskState) -> None:
+        """Place and send one task; blocks until its ref args are ready
+        (and replayed, if lost). Retries placement while workers die."""
+        spec = ts.spec
+        while not self._shutdown:
+            # re-resolve on every attempt: an arg can turn LOST between
+            # placement retries (its owner died under us) and only this
+            # path triggers its replay
+            for ref in spec.args:
+                if isinstance(ref, ClusterRef):
+                    self._ensure_arg_ready(ref)
+                    meta = self.plane.meta(ref.oid)
+                    if (meta.state == HEAD
+                            and isinstance(meta.value, _TaskErr)):
+                        # a failed upstream must poison dependents, not
+                        # travel to a worker as an argument value
+                        ts.error = f"upstream task failed: {meta.value}"
+                        self.plane.fulfill_inline(spec.out.oid,
+                                                  _TaskErr(ts.error))
+                        ts.finished = True
+                        ts.event.set()
+                        return
+            views = self._views()
+            if not views:
+                if not self.respawn and self.workers_alive() == 0:
+                    # the whole fleet is gone and nothing will replace
+                    # it: fail the task so waiters raise instead of
+                    # spinning forever
+                    ts.error = "no live workers and respawn disabled"
+                    self.plane.fulfill_inline(spec.out.oid,
+                                              _TaskErr(ts.error))
+                    ts.finished = True
+                    ts.event.set()
+                    return
+                time.sleep(0.05)
+                continue
+            arg_bytes = {a.oid: self.plane.meta(a.oid).nbytes
+                         for a in spec.args
+                         if isinstance(a, ClusterRef)}
+            wid = self.scheduler.place(spec, views, arg_bytes)
+            wh = self._handle_for(wid)
+            if wh is None or not wh.alive:
+                continue
+            try:
+                wire = self._wire_spec(spec, wh)
+                with self._lock:
+                    wh.inflight.add(spec.task_id)
+                ts.wid = wid
+                wh.send(("task", spec.task_id, wire))
+                return
+            except (OSError, BrokenPipeError, ValueError):
+                with self._lock:
+                    wh.inflight.discard(spec.task_id)
+                time.sleep(0.02)  # worker died under us; replace + retry
+
+    def _wire_spec(self, spec: TaskSpec, wh: _WorkerHandle) -> Dict:
+        """Encode a task for the wire, resolving every ref arg so the
+        worker never has to fetch mid-task (locality keeps this cheap:
+        the scheduler prefers the owner of the biggest inputs)."""
+        wire_args = []
+        for a in spec.args:
+            if not isinstance(a, ClusterRef):
+                wire_args.append(("val", a))
+                continue
+            meta = self.plane.meta(a.oid)
+            if meta.state == HEAD:
+                wire_args.append(("obj", a.oid, meta.value))
+            elif meta.state == REMOTE and meta.owner == wh.wid:
+                wire_args.append(("loc", a.oid))
+            elif meta.state == REMOTE:
+                # transfer on demand, relayed through the head
+                got = self._fetch(a.oid)
+                if got is None:
+                    # owner died mid-fetch: force a dispatch retry,
+                    # which re-resolves (and replays) the arg
+                    raise ValueError(f"arg {a} fetch failed")
+                wire_args.append(("obj", a.oid, got[1]))
+            else:
+                raise ValueError(f"arg {a} not ready")
+        wire = {"kind": spec.kind, "out_oid": spec.out.oid,
+                "gather": spec.gather, "args": wire_args}
+        if spec.kind == "chunk":
+            if spec.blob_id not in wh.blobs:
+                blob = self._blobs[spec.blob_id]
+                wh.send(("blob", spec.blob_id, blob))
+                wh.blobs.add(spec.blob_id)
+                self.bytes_shipped += len(blob)
+            wire.update(blob_id=spec.blob_id, lo=spec.lo, hi=spec.hi,
+                        written=spec.written)
+        else:
+            wire["fn_blob"] = spec.fn_blob
+        return wire
+
+    # -- public API --------------------------------------------------------
+    def submit(self, fn, *args, device_pref: str = "",
+               est_flops: float = 0.0) -> ClusterRef:
+        """Asynchronously run ``fn(*args)`` on some worker process.
+        Args may be plain picklable values or :class:`ClusterRef`."""
+        tid = next(self._task_ids)
+        out = self.plane.new_ref(tid)
+        spec = TaskSpec(tid, "fn", dumps_fn(fn), tuple(args), out,
+                        device_pref=device_pref, est_flops=est_flops)
+        ts = _TaskState(spec)
+        with self._lock:
+            self._tasks[tid] = ts
+            self._producer[out.oid] = tid
+        pending = any(isinstance(a, ClusterRef)
+                      and self.plane.meta(a.oid).state not in (HEAD, REMOTE)
+                      for a in args)
+        if pending:
+            threading.Thread(target=self._dispatch, args=(ts,),
+                             daemon=True).start()
+        else:
+            self._dispatch(ts)
+        return out
+
+    def put(self, value: Any) -> ClusterRef:
+        return self.plane.put_local(value)
+
+    def get(self, ref_or_refs, timeout: Optional[float] = 60.0):
+        if isinstance(ref_or_refs, list):
+            return [self.get(r, timeout) for r in ref_or_refs]
+        ref: ClusterRef = ref_or_refs
+        deadline = None if timeout is None else time.time() + timeout
+        while True:
+            meta = self.plane.meta(ref.oid)
+            if meta.state == HEAD:
+                if isinstance(meta.value, _TaskErr):
+                    raise ClusterTaskError(str(meta.value))
+                return meta.value
+            if meta.state == REMOTE:
+                got = self._fetch(ref.oid)
+                if got is not None:
+                    return got[1]
+                time.sleep(0.02)   # owner dying; wait for the LOST mark
+            elif meta.state == LOST:
+                self._replay(ref.oid)
+            self.plane.wait_ready(ref.oid, 0.05)
+            if deadline is not None and time.time() > deadline:
+                raise TimeoutError(f"timed out waiting for {ref}")
+
+    def wait(self, refs: Sequence[ClusterRef], num_returns: int = 1,
+             timeout: Optional[float] = None):
+        """ray.wait analogue: (ready, pending)."""
+        deadline = None if timeout is None else time.time() + timeout
+        ready, pending = [], list(refs)
+        while len(ready) < num_returns and pending:
+            for r in list(pending):
+                if self.plane.meta(r.oid).state in (HEAD, REMOTE):
+                    ready.append(r)
+                    pending.remove(r)
+            if len(ready) >= num_returns:
+                break
+            if deadline is not None and time.time() > deadline:
+                break
+            time.sleep(0.005)
+        return ready, pending
+
+    def _fetch(self, oid: int) -> Optional[tuple]:
+        """Pull a remote object to the head (transfer on demand).
+        Returns ``("v", value)`` on success — the wrapper keeps a stored
+        ``None`` distinguishable from failure — or ``None`` when the
+        owner is gone (caller falls through to the LOST/replay path)."""
+        meta = self.plane.meta(oid)
+        if meta.state == HEAD:
+            return ("v", meta.value)
+        wh = self._handle_for(meta.owner) if meta.owner is not None \
+            else None
+        if wh is None or not wh.alive:
+            return None
+        ev = self._fetch_events.setdefault(oid, threading.Event())
+        try:
+            wh.send(("get", oid))
+        except OSError:
+            self._fetch_events.pop(oid, None)
+            return None
+        deadline = time.time() + 30.0
+        while not ev.wait(0.05):
+            if not wh.alive:      # owner died before replying
+                self._fetch_events.pop(oid, None)
+                return None
+            if time.time() > deadline:
+                self._fetch_events.pop(oid, None)
+                return None
+        meta = self.plane.meta(oid)
+        return ("v", meta.value) if meta.state == HEAD else None
+
+    # -- lineage replay ----------------------------------------------------
+    def _replay(self, oid: int) -> None:
+        """Recompute a LOST object from its serialized task spec; the
+        spec's own lost ref args replay transitively via dispatch."""
+        with self._lock:
+            tid = self._producer.get(oid)
+            ts = self._tasks.get(tid) if tid is not None else None
+        if ts is None:
+            raise ClusterTaskError(
+                f"object {oid} lost and has no lineage (direct put?)")
+        if not self.plane.try_reset_lost(oid):
+            return  # someone else already replayed it
+        self.replays += 1
+        ts.finished = False
+        ts.event = threading.Event()
+        self._dispatch(ts)
+
+    # -- pfor sharding (the repro.core.pfor protocol) ----------------------
+    def pfor_shards(self, body, lo: int, hi: int,
+                    tile: Optional[int] = None,
+                    written: Sequence[str] = ()) -> None:
+        """Execute a generated pfor body across worker processes.
+
+        The body closure (code + captured arrays) broadcasts once per
+        worker; chunk tasks reference it and return sparse updates for
+        the written arrays, which merge into the head's live arrays —
+        pfor iterations write disjoint regions, so the merge needs no
+        conflict resolution."""
+        n = hi - lo
+        if n <= 0:
+            return
+        blob = dumps_fn(body)
+        bid = next(self._blob_ids)
+        self._blobs[bid] = blob
+        views = self._views()
+        if not views:
+            raise ClusterTaskError("no live workers for pfor")
+        if tile:
+            ranges = [range(t, min(t + tile, hi))
+                      for t in range(lo, hi, tile)]
+        else:
+            # capability-proportional, with skew clamped to 4x: a probe
+            # that mis-measured on a throttled host must not starve the
+            # run (genuine heterogeneity up to 4x still shows through)
+            top = max(v.profile.gflops for v in views)
+            weights = [max(v.profile.gflops, 0.25 * top) for v in views]
+            ranges = self.scheduler.proportional_chunks(lo, hi, weights)
+        refs = []
+        for r in ranges:
+            if len(r) == 0:
+                continue
+            tid = next(self._task_ids)
+            out = self.plane.new_ref(tid)
+            spec = TaskSpec(tid, "chunk", None, (), out, blob_id=bid,
+                            lo=r.start, hi=r.stop,
+                            written=tuple(written), gather=True)
+            ts = _TaskState(spec)
+            with self._lock:
+                self._tasks[tid] = ts
+                self._producer[out.oid] = tid
+            self._dispatch(ts)
+            refs.append(out)
+            self.chunks_dispatched += 1
+        self.pfor_runs += 1
+        arrays = {n_: v for n_, v in closure_arrays(body).items()
+                  if isinstance(v, np.ndarray)}
+        try:
+            for ref in refs:
+                # no per-chunk timeout: a healthy chunk may legitimately
+                # compute for minutes; failures surface via worker-death
+                # resubmission (bounded by max_attempts) instead
+                updates = self.get(ref, timeout=None)
+                for name, (idx, vals) in (updates or {}).items():
+                    arr = arrays.get(name)
+                    if arr is None:
+                        continue
+                    arr[np.unravel_index(idx, arr.shape)] = vals
+        finally:
+            self._blobs.pop(bid, None)
+            # chunk updates are consumed; their lineage window is over.
+            # Drop every per-chunk record so a serving loop calling the
+            # kernel forever holds the head's memory flat.
+            with self._lock:
+                for ref in refs:
+                    tid = self._producer.pop(ref.oid, None)
+                    if tid is not None:
+                        self._tasks.pop(tid, None)
+            for ref in refs:
+                self.plane.release(ref.oid)
+            with self._lock:
+                handles = [wh for wh in self._handles.values()
+                           if wh.alive]
+            for wh in handles:
+                if bid in wh.blobs:
+                    try:
+                        wh.send(("unblob", bid))
+                    except OSError:
+                        pass
+                    wh.blobs.discard(bid)
+
+    def distribute_profitable(self, flops: float, payload_bytes: int,
+                              n_chunks: int) -> bool:
+        """Local-vs-distributed decision from the measured device
+        profiles (consumed by :mod:`repro.core.pfor`)."""
+        from repro.core import cost
+        profiles = self.profiles()
+        return cost.cluster_distribute_profitable(
+            flops, payload_bytes, profiles,
+            max(1, n_chunks),
+            local_gflops=self.local_profile.gflops)
+
+    # -- compilation against the shared variant store ----------------------
+    def compile(self, fn, **kw):
+        """Compile a kernel bound to this runtime, warm-starting from the
+        shared variant cache when ``cache_dir`` was given (a fleet of
+        runtimes pointed at one directory compiles each kernel once)."""
+        from repro.core.compiler import compile_kernel
+        kw.setdefault("cache", self.variant_cache)
+        kw.setdefault("workers", max(1, len(self._views())))
+        return compile_kernel(fn, runtime=self, **kw)
+
+    # -- fault injection / ops --------------------------------------------
+    def kill_worker(self, wid: Optional[int] = None) -> Optional[int]:
+        """SIGKILL a worker process (fault-injection drill). Lineage +
+        resubmission recover its objects and in-flight tasks."""
+        with self._lock:
+            live = [wh for wh in self._handles.values() if wh.alive]
+            if not live:
+                return None
+            victim = live[0]
+            if wid is not None:
+                for wh in live:
+                    if wh.wid == wid:
+                        victim = wh
+                        break
+        try:
+            os.kill(victim.proc.pid, signal.SIGKILL)
+        except (OSError, ProcessLookupError):
+            return None
+        return victim.wid
+
+    def scale_to(self, n: int) -> None:
+        with self._lock:
+            live = [wh for wh in self._handles.values() if wh.alive]
+        delta = n - len(live)
+        if delta > 0:
+            spawned = [self._spawn_worker() for _ in range(delta)]
+            for wh in spawned:
+                wh.hello.wait(10.0)
+        elif delta < 0:
+            for wh in live[:-delta]:
+                wh.draining = True
+                try:
+                    wh.send(("shutdown",))
+                except OSError:
+                    pass
+
+    def profiles(self) -> List[DeviceProfile]:
+        with self._lock:
+            return [wh.profile for wh in self._handles.values()
+                    if wh.alive and wh.profile is not None]
+
+    def workers_alive(self) -> int:
+        with self._lock:
+            return sum(1 for wh in self._handles.values() if wh.alive)
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            tasks = len(self._tasks)
+            done = sum(1 for t in self._tasks.values() if t.finished)
+        out = {
+            "workers": self.workers_alive(),
+            "tasks": tasks,
+            "completed": done,
+            "replays": self.replays,
+            "lineage_replays": self.replays,
+            "resubmits": self.resubmits,
+            "worker_deaths": self.worker_deaths,
+            "pfor_runs": self.pfor_runs,
+            "chunks_dispatched": self.chunks_dispatched,
+            "bytes_shipped": self.bytes_shipped,
+            "plane": self.plane.stats(),
+        }
+        return out
+
+    def telemetry(self) -> Dict[str, Any]:
+        out = self.stats()
+        out["profiles"] = [p.as_dict() for p in self.profiles()]
+        out["local_gflops"] = self.local_profile.gflops
+        if self.variant_cache is not None:
+            out["cache"] = self.variant_cache.telemetry()
+        return out
+
+    def shutdown(self) -> None:
+        self._shutdown = True
+        with self._lock:
+            handles = list(self._handles.values())
+        for wh in handles:
+            try:
+                wh.send(("shutdown",))
+            except OSError:
+                pass
+        deadline = time.time() + 2.0
+        for wh in handles:
+            wh.proc.join(max(0.05, deadline - time.time()))
+            if wh.proc.is_alive():
+                wh.proc.terminate()
+                wh.proc.join(1.0)
+        for wh in handles:
+            try:
+                wh.conn.close()
+            except OSError:
+                pass
+
+    def __enter__(self) -> "ClusterRuntime":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()

@@ -1,0 +1,107 @@
+"""Per-worker device profiles: measured capability, not configured.
+
+Every worker process measures its own hardware at startup — a small
+matmul for FLOP rate, a copy sweep for memory bandwidth, ``os`` probes
+for core count and memory — and reports the profile in its hello
+message. The head adds a measured transport bandwidth (payload ping over
+the worker's pipe). The placement scheduler and the local-vs-distributed
+profitability test in :mod:`repro.core.cost` consume these numbers; on a
+heterogeneous fleet the pfor sharder sizes chunks proportional to
+``gflops``.
+
+GPU probing is gated behind ``REPRO_DISTRIB_PROBE_GPU=1`` because a jax
+import costs seconds per worker process; the offline container is
+CPU-only anyway.
+"""
+
+from __future__ import annotations
+
+import os
+import socket
+import time
+from dataclasses import asdict, dataclass
+from typing import Any, Dict
+
+import numpy as np
+
+
+@dataclass
+class DeviceProfile:
+    wid: int
+    host: str = ""
+    pid: int = 0
+    cpus: int = 1
+    mem_bytes: int = 0
+    gflops: float = 1.0            # measured matmul rate
+    membw_gbs: float = 1.0         # measured copy bandwidth
+    has_gpu: bool = False
+    gpu_kind: str = ""
+    transport_mbs: float = 0.0     # filled by the head's payload ping
+
+    def as_dict(self) -> Dict[str, Any]:
+        return asdict(self)
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "DeviceProfile":
+        return DeviceProfile(**d)
+
+
+def _probe_mem_bytes() -> int:
+    try:
+        return (os.sysconf("SC_PAGE_SIZE")
+                * os.sysconf("SC_PHYS_PAGES"))
+    except (ValueError, OSError, AttributeError):
+        return 0
+
+
+def _probe_gpu() -> tuple:
+    if os.environ.get("REPRO_DISTRIB_PROBE_GPU") != "1":
+        return False, ""
+    try:
+        import jax
+        devs = [d for d in jax.devices()
+                if d.platform not in ("cpu",)]
+        if devs:
+            return True, devs[0].platform
+    except Exception:
+        pass
+    return False, ""
+
+
+def measure_profile(wid: int, n: int = 128) -> DeviceProfile:
+    """Micro-benchmark this process. ``n`` keeps the probe ~milliseconds."""
+    rng = np.random.default_rng(wid + 1)
+    a = rng.normal(size=(n, n))
+    b = rng.normal(size=(n, n))
+    a @ b  # warm the BLAS path
+    reps = 5
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        a @ b
+        best = min(best, time.perf_counter() - t0)
+    # best-of-N: scheduler noise only ever *slows* a rep, so the fastest
+    # one is the honest capability number on a shared host
+    gflops = 2.0 * n ** 3 / max(1e-9, best) / 1e9
+
+    buf = rng.normal(size=1 << 20)          # 8 MB
+    buf.copy()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        buf.copy()
+        best = min(best, time.perf_counter() - t0)
+    membw_gbs = 2.0 * buf.nbytes / max(1e-9, best) / 1e9  # read + write
+
+    has_gpu, gpu_kind = _probe_gpu()
+    return DeviceProfile(
+        wid=wid,
+        host=socket.gethostname(),
+        pid=os.getpid(),
+        cpus=os.cpu_count() or 1,
+        mem_bytes=_probe_mem_bytes(),
+        gflops=round(gflops, 3),
+        membw_gbs=round(membw_gbs, 3),
+        has_gpu=has_gpu,
+        gpu_kind=gpu_kind,
+    )

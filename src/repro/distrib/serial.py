@@ -1,0 +1,136 @@
+"""Function/closure serialization for cross-process task shipment.
+
+``pickle`` refuses locally-defined functions and closures — exactly what
+the generated ``__pfor_body_N`` chunk functions are. This module encodes a
+function as:
+
+  * its code object (``marshal`` — same interpreter on both ends, which
+    the spawned-worker model guarantees);
+  * its closure cell values (pickled — this is how the captured kernel
+    arrays travel to the worker);
+  * the globals it references, each as a module-by-name marker (``xp`` →
+    re-import ``numpy`` on the worker), a pickled value, or the
+    ``__pfor_run`` sentinel (a nested pfor inside a shipped chunk runs
+    sequentially on the worker — one level of distribution is enough);
+  * name / defaults.
+
+Everything lands in one ``bytes`` blob; :func:`loads_fn` rebuilds a real
+function with fresh cells on the receiving process.
+"""
+
+from __future__ import annotations
+
+import importlib
+import marshal
+import pickle
+import types
+from typing import Any, Dict, List, Tuple
+
+_PICKLE_PROTO = 4
+
+# Global-slot markers
+_MOD = "mod"        # re-import module by name
+_VAL = "val"        # pickled value
+_PFOR = "pfor"      # substitute the worker's sequential __pfor_run
+_SKIP = "skip"      # unpicklable and unknown: leave unbound
+
+
+def _sequential_pfor_run(body, lo, hi, tile):
+    """Worker-side stand-in for nested pfor hooks: run the chunk inline
+    (the head already sharded the outermost level across processes)."""
+    if hi > lo:
+        body(lo, hi)
+
+
+def _referenced_globals(code) -> List[str]:
+    """All global names a code object (or its nested code consts) loads."""
+    names = list(code.co_names)
+    for const in code.co_consts:
+        if isinstance(const, types.CodeType):
+            names.extend(_referenced_globals(const))
+    seen, out = set(), []
+    for n in names:
+        if n not in seen:
+            seen.add(n)
+            out.append(n)
+    return out
+
+
+def dumps_fn(fn) -> bytes:
+    """Encode a function — closures included — into a shippable blob."""
+    code = fn.__code__
+    cells: List[bytes] = []
+    for cell in (fn.__closure__ or ()):
+        cells.append(pickle.dumps(cell.cell_contents,
+                                  protocol=_PICKLE_PROTO))
+    gslots: Dict[str, Tuple[str, Any]] = {}
+    for name in _referenced_globals(code):
+        if name not in fn.__globals__:
+            continue
+        val = fn.__globals__[name]
+        if name == "__pfor_run":
+            gslots[name] = (_PFOR, None)
+        elif isinstance(val, types.ModuleType):
+            gslots[name] = (_MOD, val.__name__)
+        else:
+            try:
+                gslots[name] = (_VAL, pickle.dumps(
+                    val, protocol=_PICKLE_PROTO))
+            except Exception:
+                gslots[name] = (_SKIP, None)
+    payload = {
+        "code": marshal.dumps(code),
+        "cells": cells,
+        "freevars": code.co_freevars,
+        "globals": gslots,
+        "name": fn.__name__,
+        "defaults": pickle.dumps(fn.__defaults__, protocol=_PICKLE_PROTO),
+        "kwdefaults": pickle.dumps(fn.__kwdefaults__,
+                                   protocol=_PICKLE_PROTO),
+    }
+    return pickle.dumps(payload, protocol=_PICKLE_PROTO)
+
+
+def loads_fn(blob: bytes):
+    """Rebuild a function serialized by :func:`dumps_fn`.
+
+    The result carries fresh closure cells holding the *worker's* copies
+    of the captured objects; ``fn.__closure__`` is the worker-side handle
+    used to read arrays back out after a chunk runs."""
+    payload = pickle.loads(blob)
+    code = marshal.loads(payload["code"])
+    g: Dict[str, Any] = {"__builtins__": __builtins__}
+    for name, (kind, data) in payload["globals"].items():
+        if kind == _MOD:
+            g[name] = importlib.import_module(data)
+        elif kind == _VAL:
+            g[name] = pickle.loads(data)
+        elif kind == _PFOR:
+            g[name] = _sequential_pfor_run
+        # _SKIP: unbound — a NameError on use is the honest failure mode
+    cells = tuple(types.CellType(pickle.loads(c))
+                  for c in payload["cells"])
+    fn = types.FunctionType(code, g, payload["name"],
+                            pickle.loads(payload["defaults"]), cells)
+    kwdefaults = payload.get("kwdefaults")
+    if kwdefaults is not None:
+        fn.__kwdefaults__ = pickle.loads(kwdefaults)
+    return fn
+
+
+def closure_arrays(fn) -> Dict[str, Any]:
+    """Name → value for every closure cell of ``fn`` (by free-var name)."""
+    out: Dict[str, Any] = {}
+    for name, cell in zip(fn.__code__.co_freevars, fn.__closure__ or ()):
+        out[name] = cell.cell_contents
+    return out
+
+
+def payload_nbytes(fn) -> int:
+    """Rough shipment size of a closure: bytes of captured ndarrays."""
+    total = 0
+    for v in closure_arrays(fn).values():
+        nb = getattr(v, "nbytes", None)
+        if nb is not None:
+            total += int(nb)
+    return total

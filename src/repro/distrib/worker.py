@@ -1,0 +1,175 @@
+"""Worker-process main loop.
+
+One worker = one OS process holding: a pipe back to the head, a local
+object cache (its shard of the object plane), a cache of deserialized
+pfor body blobs, and the device profile it measured at startup.
+
+The loop is deliberately single-threaded: the head resolves every
+object transfer *before* dispatching a task, so a worker never needs to
+service a fetch while computing — no cross-worker deadlock is possible
+by construction.
+
+Wire protocol (pickled tuples over a ``multiprocessing`` connection —
+the same framing a TCP transport would use):
+
+  head → worker: ("task", tid, spec) | ("blob", bid, bytes)
+                 | ("unblob", bid) | ("get", oid) | ("free", oid)
+                 | ("ping", payload) | ("profile",) | ("shutdown",)
+  worker → head: ("hello", profile) | ("done", tid, oid, nbytes, payload)
+                 | ("err", tid, message, traceback)
+                 | ("obj", oid, payload) | ("pong", nbytes)
+
+where ``payload`` is ``("v", value)`` when the value travels with the
+message and ``None`` when it stayed (or was not found) on the worker —
+the wrapper keeps a task that legitimately *returns* ``None``
+distinguishable from a result that was kept remote.
+"""
+
+from __future__ import annotations
+
+import traceback
+from typing import Any, Dict, Tuple
+
+import numpy as np
+
+from .device import measure_profile
+from .serial import closure_arrays, loads_fn
+
+# results at or below this many bytes ride back inline with "done"
+INLINE_MAX = 32 * 1024
+
+
+def _chunk_updates(body, lo: int, hi: int,
+                   written: Tuple[str, ...]) -> Dict[str, tuple]:
+    """Run a pfor chunk and extract its disjoint-region writes.
+
+    The chunk writes in place into the *worker's* copies of the captured
+    arrays; the head needs (indices, values) per written array to merge
+    into the real ones. ``written`` (from the kernel's schedule) narrows
+    the diff to arrays the pfor body can write; when empty we
+    conservatively diff every captured array."""
+    arrays = {n: v for n, v in closure_arrays(body).items()
+              if isinstance(v, np.ndarray)}
+    targets = {n: a for n, a in arrays.items()
+               if not written or n in written}
+    snaps = {n: a.copy() for n, a in targets.items()}
+    try:
+        body(lo, hi)
+    except BaseException:
+        # roll the cached body's arrays back to pristine: a retry of
+        # this chunk (possibly on this same worker) must not diff
+        # against this attempt's partial writes — values equal to the
+        # poisoned snapshot would silently vanish from the gather
+        for name, arr in targets.items():
+            np.copyto(arr, snaps[name])
+        raise
+    updates: Dict[str, tuple] = {}
+    for name, arr in targets.items():
+        mask = arr != snaps[name]
+        if mask.any():
+            idx = np.flatnonzero(mask.ravel())
+            updates[name] = (idx, arr.ravel()[idx])
+    return updates
+
+
+class WorkerState:
+    def __init__(self, wid: int):
+        self.wid = wid
+        self.objects: Dict[int, Any] = {}     # local object-plane shard
+        self.bodies: Dict[int, Any] = {}      # blob_id → deserialized fn
+        self.blob_bytes: Dict[int, bytes] = {}
+        self.tasks_run = 0
+        self.chunks_run = 0
+
+    # -- task execution ---------------------------------------------------
+    def resolve_args(self, wire_args) -> list:
+        out = []
+        for entry in wire_args:
+            kind = entry[0]
+            if kind == "val":
+                out.append(entry[1])
+            elif kind == "obj":            # value attached by the head
+                # deliberately NOT cached: the head only ever resolves
+                # ("loc", oid) against objects this worker *produced*,
+                # so retaining relayed args would only leak memory
+                out.append(entry[2])
+            elif kind == "loc":            # resident here already
+                out.append(self.objects[entry[1]])
+            else:  # pragma: no cover
+                raise ValueError(f"bad arg entry {kind!r}")
+        return out
+
+    def run_task(self, spec) -> Any:
+        if spec["kind"] == "chunk":
+            bid = spec["blob_id"]
+            body = self.bodies.get(bid)
+            if body is None:
+                body = loads_fn(self.blob_bytes[bid])
+                self.bodies[bid] = body
+            self.chunks_run += 1
+            return _chunk_updates(body, spec["lo"], spec["hi"],
+                                  tuple(spec.get("written") or ()))
+        fn = loads_fn(spec["fn_blob"])
+        args = self.resolve_args(spec["args"])
+        self.tasks_run += 1
+        return fn(*args)
+
+
+def worker_main(conn, wid: int) -> None:
+    """Entry point of the spawned worker process."""
+    state = WorkerState(wid)
+    try:
+        conn.send(("hello", measure_profile(wid).as_dict()))
+    except (EOFError, OSError, BrokenPipeError):
+        return
+    while True:
+        try:
+            msg = conn.recv()
+        except (EOFError, OSError):
+            break  # head is gone
+        kind = msg[0]
+        try:
+            if kind == "task":
+                _, tid, spec = msg
+                try:
+                    result = state.run_task(spec)
+                except BaseException as exc:  # noqa: BLE001
+                    conn.send(("err", tid, repr(exc),
+                               traceback.format_exc()))
+                    continue
+                oid = spec["out_oid"]
+                nbytes = int(getattr(result, "nbytes", 0) or 0)
+                if spec.get("gather") or nbytes <= INLINE_MAX:
+                    conn.send(("done", tid, oid, nbytes, ("v", result)))
+                else:
+                    state.objects[oid] = result
+                    conn.send(("done", tid, oid, nbytes, None))
+            elif kind == "blob":
+                _, bid, blob = msg
+                state.blob_bytes[bid] = blob
+            elif kind == "unblob":
+                state.blob_bytes.pop(msg[1], None)
+                state.bodies.pop(msg[1], None)
+            elif kind == "free":
+                # ownership moved to the head (post-fetch): drop our copy
+                state.objects.pop(msg[1], None)
+            elif kind == "get":
+                oid = msg[1]
+                if oid in state.objects:
+                    conn.send(("obj", oid, ("v", state.objects[oid])))
+                else:
+                    conn.send(("obj", oid, None))
+            elif kind == "ping":
+                conn.send(("pong", len(msg[1])))
+            elif kind == "profile":
+                # re-measure on request: the head serializes these so
+                # fleet micro-benchmarks never contend with each other
+                conn.send(("hello", measure_profile(state.wid).as_dict()))
+            elif kind == "shutdown":
+                break
+        except (EOFError, OSError, BrokenPipeError):
+            break
+    try:
+        conn.close()
+    except OSError:
+        pass

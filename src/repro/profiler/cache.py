@@ -56,12 +56,17 @@ class CacheStats:
     codegen_skipped: int = 0
     # entries evicted by prune()/auto-prune
     pruned: int = 0
+    # hits satisfied from / entries published to the shared store
+    shared_hits: int = 0
+    shared_puts: int = 0
 
     def as_dict(self) -> Dict[str, int]:
         return {"hits": self.hits, "misses": self.misses,
                 "puts": self.puts, "errors": self.errors,
                 "codegen_skipped": self.codegen_skipped,
-                "pruned": self.pruned}
+                "pruned": self.pruned,
+                "shared_hits": self.shared_hits,
+                "shared_puts": self.shared_puts}
 
 
 @dataclass
@@ -87,7 +92,8 @@ class VariantCache:
     """
 
     def __init__(self, cache_dir: str, max_entries: Optional[int] = None,
-                 max_bytes: Optional[int] = None):
+                 max_bytes: Optional[int] = None,
+                 shared_dir: Optional[str] = None):
         self.cache_dir = os.path.abspath(os.path.expanduser(cache_dir))
         os.makedirs(self.cache_dir, exist_ok=True)
         self.stats = CacheStats()
@@ -95,6 +101,16 @@ class VariantCache:
         self.max_entries = max_entries
         self.max_bytes = max_bytes
         self._puts_since_sweep = 0
+        # two-tier shared store (ROADMAP "cross-node cache sharing"):
+        # ``shared_dir`` names a fleet-wide directory (NFS mount, synced
+        # volume, container-image bake). Local misses fall through to it
+        # (fetched entries are copied local), local puts publish to it —
+        # so one cold compile anywhere warm-starts every node.
+        self.shared_dir = None
+        if shared_dir is not None:
+            self.shared_dir = os.path.abspath(
+                os.path.expanduser(shared_dir))
+            os.makedirs(self.shared_dir, exist_ok=True)
 
     # -- paths ----------------------------------------------------------
     def _path(self, key: str) -> str:
@@ -106,8 +122,9 @@ class VariantCache:
         key = cache_key(src_hash, type_sig, backend)
         path = self._path(key)
         if not os.path.exists(path):
-            self.stats.misses += 1
-            return None
+            if not self._fetch_shared(key):
+                self.stats.misses += 1
+                return None
         try:
             with open(path, "rb") as f:
                 entry = pickle.load(f)
@@ -143,8 +160,51 @@ class VariantCache:
                 pass
             raise
         self.stats.puts += 1
+        self._publish_shared(key)
         self._auto_prune()
         return key
+
+    # -- shared-store backend -------------------------------------------
+    def _shared_path(self, key: str) -> Optional[str]:
+        if self.shared_dir is None:
+            return None
+        return os.path.join(self.shared_dir, f"{key}.pkl")
+
+    def _fetch_shared(self, key: str) -> bool:
+        """Local miss → pull the entry from the shared store (atomic
+        copy into the local tier). Returns True when the local file now
+        exists."""
+        spath = self._shared_path(key)
+        if spath is None or not os.path.exists(spath):
+            return False
+        try:
+            with open(spath, "rb") as f:
+                data = f.read()
+            fd, tmp = tempfile.mkstemp(dir=self.cache_dir, suffix=".tmp")
+            with os.fdopen(fd, "wb") as f:
+                f.write(data)
+            os.replace(tmp, self._path(key))
+            self.stats.shared_hits += 1
+            return True
+        except OSError:
+            self.stats.errors += 1
+            return False
+
+    def _publish_shared(self, key: str) -> None:
+        spath = self._shared_path(key)
+        if spath is None or os.path.exists(spath):
+            return
+        try:
+            with open(self._path(key), "rb") as f:
+                data = f.read()
+            fd, tmp = tempfile.mkstemp(dir=self.shared_dir,
+                                       suffix=".tmp")
+            with os.fdopen(fd, "wb") as f:
+                f.write(data)
+            os.replace(tmp, spath)
+            self.stats.shared_puts += 1
+        except OSError:
+            self.stats.errors += 1
 
     def _auto_prune(self) -> None:
         """Enforce the constructor caps. Eviction goes 10% below the cap

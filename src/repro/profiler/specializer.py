@@ -38,6 +38,7 @@ class Specialization:
     tier: str = "exact"
     promoted_at: float = field(default_factory=time.time)
     hits: int = 0
+    latency_ema: Optional[float] = None   # maintained by CompiledKernel
 
 
 class Specializer:
@@ -50,12 +51,32 @@ class Specializer:
 
     def __init__(self, hot_threshold: int = 16,
                  interval_s: float = 0.05,
-                 max_specializations_per_kernel: int = 64):
+                 max_specializations_per_kernel: int = 64,
+                 demote_cold_scans: int = 3,
+                 cold_after_s: float = 10.0,
+                 regress_factor: float = 1.5,
+                 min_hits_for_regress: int = 8):
         self.hot_threshold = hot_threshold
         self.interval_s = interval_s
         self.max_per_kernel = max_specializations_per_kernel
+        # demotion policy: a pin is dropped when its signature goes cold
+        # (no new hits across ``demote_cold_scans`` consecutive scans
+        # AND at least ``cold_after_s`` of wall time — the time guard
+        # keeps a fast background scan interval from thrashing pins of
+        # slow-but-steady callers) or when its per-call latency EMA
+        # regresses ``regress_factor``× against the full decision tree's
+        # EMA for the same signature
+        self.demote_cold_scans = demote_cold_scans
+        self.cold_after_s = cold_after_s
+        self.regress_factor = regress_factor
+        self.min_hits_for_regress = min_hits_for_regress
         self.kernels: Dict[str, Any] = {}
         self.promotions: List[Tuple[str, Specialization]] = []
+        self.demotions: List[Tuple[str, Tuple, str]] = []
+        # (kernel, sig) → (hits at last scan, consecutive stale scans,
+        #                  time the hit count last changed)
+        self._hit_marks: Dict[Tuple[str, Tuple],
+                              Tuple[int, int, float]] = {}
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
         self._lock = threading.Lock()
@@ -81,6 +102,8 @@ class Specializer:
             installed = getattr(ck, "specializations", None)
             if counts is None or decisions is None or installed is None:
                 continue
+            # demote first: it can free pin slots for hotter signatures
+            self._demote_sweep(kname, ck)
             if len(installed) >= self.max_per_kernel:
                 continue
             # snapshot to tolerate concurrent dispatch
@@ -94,11 +117,51 @@ class Specializer:
                 spec = Specialization(sig, variant_name, flops,
                                       legality_ok)
                 ck.install_specialization(spec)
+                self._hit_marks[(kname, sig)] = (0, 0, time.time())
                 promoted.append(spec)
                 self.promotions.append((kname, spec))
                 if len(installed) >= self.max_per_kernel:
                     break
         return promoted
+
+    def _demote_sweep(self, kname: str, ck) -> None:
+        """Drop pins that went cold or regressed (ROADMAP demotion item).
+
+        Demoted signatures get their hot-counter reset, so a workload
+        that comes back later re-earns its pin through the normal
+        promotion path — demotion is a reversible cooldown, not a ban."""
+        installed = getattr(ck, "specializations", None)
+        if installed is None:
+            return
+        now = time.time()
+        for sig, spec in list(installed.items()):
+            reason = None
+            key = (kname, sig)
+            last_hits, stale, changed_t = self._hit_marks.get(
+                key, (0, 0, now))
+            if spec.hits == last_hits:
+                stale += 1
+            else:
+                stale, changed_t = 0, now
+            self._hit_marks[key] = (spec.hits, stale, changed_t)
+            if (stale >= self.demote_cold_scans
+                    and now - changed_t >= self.cold_after_s):
+                reason = "cold"
+            else:
+                tree = getattr(ck, "tree_latency", {}).get(sig)
+                ema = getattr(spec, "latency_ema", None)
+                if (tree is not None and ema is not None
+                        and spec.hits >= self.min_hits_for_regress
+                        and ema > self.regress_factor * tree):
+                    reason = "latency_regression"
+            if reason is None:
+                continue
+            ck.drop_specialization(sig)
+            counts = getattr(ck, "shape_counts", None)
+            if counts is not None and sig in counts:
+                counts[sig] = 0
+            self._hit_marks.pop(key, None)
+            self.demotions.append((kname, sig, reason))
 
     # -- background thread ----------------------------------------------
     def start(self) -> None:
@@ -139,6 +202,7 @@ class Specializer:
         out: Dict[str, Any] = {
             "hot_threshold": self.hot_threshold,
             "promotions": len(self.promotions),
+            "demoted": len(self.demotions),
             "running": self._thread is not None,
             "kernels": {},
         }

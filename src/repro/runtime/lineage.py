@@ -49,9 +49,20 @@ class LineageGraph:
 
     # -- recovery -----------------------------------------------------------
     def reconstruct(self, ref: ObjectRef) -> Any:
-        """Return the object's value, replaying producers as needed."""
+        """Return the object's value, replaying producers as needed.
+
+        Idempotent under concurrent eviction: the replayed value is
+        returned *directly* from the task's own output, never re-read
+        through the store — so an eviction racing the replay (a worker
+        killed mid-replay re-evicting what we just fulfilled) cannot
+        turn a successful recomputation into an ObjectLostError. A
+        racing second replay of the same object is harmless: tasks are
+        pure and deterministic, both produce the same value."""
         if self.store.available(ref):
-            return self.store.get_local(ref)
+            try:
+                return self.store.get_local(ref)
+            except ObjectLostError:
+                pass  # evicted between the check and the read: replay
         rec = self.producer_of(ref)
         if rec is None:
             raise ObjectLostError(
@@ -65,6 +76,9 @@ class LineageGraph:
             self.replays += 1
         result = rec.fn(*args, **kwargs)
         outs = result if len(rec.out_refs) > 1 else (result,)
+        value = None
         for r, v in zip(rec.out_refs, outs):
             self.store.fulfill(r, v)
-        return self.store.get_local(ref)
+            if r.id == ref.id:
+                value = v
+        return value

@@ -434,3 +434,40 @@ def test_cache_prune_age_and_autocap(tmp_path):
         capped.put(_entry(tag))
         time.sleep(0.01)
     assert len(capped.entries()) == 2
+
+
+# ---------------------------------------------------------------------------
+# allocator-cost term in the fusion gate
+# ---------------------------------------------------------------------------
+
+def test_alloc_cost_per_backend():
+    from repro.core import cost
+
+    nbytes = 1 << 20
+    # np temps pay malloc + first-touch faults; jnp's arena is cheaper
+    assert cost.alloc_cost_s("np", nbytes) > cost.alloc_cost_s(
+        "jnp", nbytes)
+    assert cost.alloc_cost_s("np", 0) == cost.ALLOC_BASE_S["np"]
+
+
+def test_fusion_gate_alloc_term_flips_np_decision():
+    from repro.core import cost
+
+    # pick (points, flops_pp, uses) near the old break-even: the memory
+    # term alone says "don't fuse", the eliminated np allocation says
+    # "fuse" — the elem_chain anomaly's regime
+    pts, uses = 4096.0, 3
+    bw_only_saved = (1 + uses) * pts * 8 / cost.HOST_CPU.hbm_bw
+    alloc_np = cost.alloc_cost_s("np", pts * 8)
+    # flops_pp sized between the two thresholds
+    flops_pp = (bw_only_saved + 0.5 * alloc_np) * cost.HOST_CPU.peak_flops \
+        / ((uses - 1) * pts)
+    assert cost.fusion_profitable(pts, flops_pp, uses, backend="np")
+    assert not cost.fusion_profitable(pts, flops_pp, uses, backend="jnp")
+
+
+def test_single_use_contraction_always_fuses():
+    from repro.core import cost
+
+    assert cost.fusion_profitable(1e9, 1e6, 1, backend="np")
+    assert cost.fusion_profitable(1e9, 1e6, 1, backend="jnp")

@@ -428,3 +428,81 @@ def test_engine_telemetry_exposes_dispatch_and_cache(tmp_path):
     assert t["kernels"]["kernels"]["gemm"]["calls"] == 1
     assert t["variant_cache"]["puts"] == 1
     assert t["ticks"] == 0
+
+
+# ---------------------------------------------------------------------------
+# specializer demotion
+# ---------------------------------------------------------------------------
+
+def _hot_compiled_gemm(n=8, hot=4, **spec_kw):
+    hints = {"C": "ndarray[f64,2]", "A": "ndarray[f64,2]",
+             "B": "ndarray[f64,2]", "alpha": "float", "beta": "float",
+             "M": "int", "N": "int", "K": "int"}
+    ck = compile_kernel(gemm_unhinted, hints=hints)
+    sp = Specializer(hot_threshold=hot, **spec_kw)
+    sp.register(ck)
+    C0, A, B = _gemm_args(n, seed=21)
+    for _ in range(hot + 1):
+        C = C0.copy()
+        ck(C, A, B, 1.0, 1.0, n, n, n)
+    assert len(sp.scan_once()) == 1
+    return ck, sp, (C0, A, B, n)
+
+
+def test_specializer_demotes_cold_signature():
+    ck, sp, (C0, A, B, n) = _hot_compiled_gemm(demote_cold_scans=2,
+                                               cold_after_s=0.0)
+    sig = next(iter(ck.specializations))
+    # one hit keeps it warm through the first scans
+    C = C0.copy()
+    ck(C, A, B, 1.0, 1.0, n, n, n)
+    sp.scan_once()
+    assert sig in ck.specializations
+    # no further hits: cold after `demote_cold_scans` idle scans
+    sp.scan_once()
+    sp.scan_once()
+    assert sig not in ck.specializations
+    assert sp.telemetry()["demoted"] == 1
+    assert sp.demotions[0][2] == "cold"
+    # the hot window restarted — the signature can re-earn its pin
+    assert ck.shape_counts[sig] == 0
+    ref = _gemm_ref(C0, A, B, 1.0, 1.0)
+    C = C0.copy()
+    ck(C, A, B, 1.0, 1.0, n, n, n)   # falls back to the full tree
+    np.testing.assert_allclose(C, ref, atol=1e-8)
+
+
+def test_specializer_demotes_latency_regression():
+    ck, sp, (C0, A, B, n) = _hot_compiled_gemm(
+        demote_cold_scans=1000, min_hits_for_regress=1,
+        regress_factor=1.5)
+    sig = next(iter(ck.specializations))
+    spec = ck.specializations[sig]
+    # keep the pin warm but make its measured latency look regressed
+    C = C0.copy()
+    ck(C, A, B, 1.0, 1.0, n, n, n)
+    ck.tree_latency[sig] = 1e-6
+    spec.latency_ema = 1e-2
+    sp.scan_once()
+    assert sig not in ck.specializations
+    assert sp.demotions[0][2] == "latency_regression"
+
+
+def test_demotion_frees_slot_for_new_promotion():
+    ck, sp, (C0, A, B, n) = _hot_compiled_gemm(
+        demote_cold_scans=1, cold_after_s=0.0,
+        max_specializations_per_kernel=1)
+    assert len(ck.specializations) == 1
+    # drive a different (hot) signature while the pinned one idles
+    m = 16
+    C0b, Ab, Bb = _gemm_args(m, seed=22)
+    for _ in range(6):
+        Cb = C0b.copy()
+        ck(Cb, Ab, Bb, 1.0, 1.0, m, m, m)
+    # one scan: the demote sweep runs first, freeing the only slot, and
+    # the promotion pass immediately pins the new hot signature into it
+    promoted = sp.scan_once()
+    assert len(promoted) == 1
+    assert len(ck.specializations) == 1
+    assert next(iter(ck.specializations)) == promoted[0].sig
+    assert sp.telemetry()["demoted"] >= 1

@@ -145,3 +145,55 @@ def test_worker_failure_requeues(rt):
     rt.pool.kill_worker()
     rt.pool.add_worker()
     assert [rt.get(r) for r in refs] == list(range(12))
+
+
+def test_replay_idempotent_under_concurrent_eviction(rt):
+    """A producing worker killed mid-replay (modelled as an eviction
+    racing the refulfill) must not surface ObjectLostError: the replayed
+    value returns directly from the recomputation."""
+    def mul(a, b):
+        return a * b
+
+    ref = rt.submit(mul, 6, 7)
+    assert rt.get(ref) == 42
+    rt.store.evict(ref)
+
+    original_fulfill = rt.store.fulfill
+    raced = {"n": 0}
+
+    def racing_fulfill(r, v):
+        original_fulfill(r, v)
+        if r.id == ref.id and raced["n"] < 2:
+            raced["n"] += 1
+            rt.store.evict(r)   # concurrent eviction mid-replay
+
+    rt.store.fulfill = racing_fulfill
+    try:
+        assert rt.get(ref) == 42   # first lineage pass succeeds
+    finally:
+        rt.store.fulfill = original_fulfill
+    assert raced["n"] >= 1
+    assert rt.lineage.replays >= 1
+
+
+def test_replay_transitive_with_racing_eviction(rt):
+    def inc(x):
+        return x + 1
+
+    a = rt.submit(inc, 0)
+    b = rt.submit(inc, a)
+    assert rt.get(b) == 2
+    rt.store.evict(a)
+    rt.store.evict(b)
+
+    original_fulfill = rt.store.fulfill
+
+    def racing_fulfill(r, v):
+        original_fulfill(r, v)
+        rt.store.evict(r)       # evict *everything* as it refills
+
+    rt.store.fulfill = racing_fulfill
+    try:
+        assert rt.lineage.reconstruct(b) == 2
+    finally:
+        rt.store.fulfill = original_fulfill
