@@ -183,6 +183,13 @@ def run_distrib(smoke: bool = False, out_path: str = "BENCH_distrib.json"
             err = float(abs(out_a - out_ref).max())
             assert err < 1e-8, f"distributed STAP mismatch: {err:.2e}"
             st = rt.stats()
+            # data-movement contract: sliceable args actually sliced,
+            # and the repeated calls above hit the persistent blob cache
+            # (the warm call is the one miss) without re-shipping
+            # unchanged cells
+            assert st["sliced_args"] > 0, st
+            assert st["blob_hits"] > 0, st
+            assert st["cells_skipped"] > 0, st
             rows.append({
                 "variant": "cluster", "workers": workers,
                 "wall_s": round(t_n, 5),
@@ -191,6 +198,12 @@ def run_distrib(smoke: bool = False, out_path: str = "BENCH_distrib.json"
                 "max_abs_err": err, "measured": True,
                 "chunks": st["chunks_dispatched"],
                 "bytes_shipped": st["bytes_shipped"],
+                "bytes_saved_sliced": st["bytes_saved_sliced"],
+                "sliced_args": st["sliced_args"],
+                "blob_hits": st["blob_hits"],
+                "blob_misses": st["blob_misses"],
+                "cells_shipped": st["cells_shipped"],
+                "cells_skipped": st["cells_skipped"],
                 "profiles_gflops": [p.gflops for p in rt.profiles()],
             })
         finally:
@@ -203,9 +216,14 @@ def run_distrib(smoke: bool = False, out_path: str = "BENCH_distrib.json"
     with open(out_path, "w") as f:
         json.dump(doc, f, indent=2)
     for r in rows:
+        extra = ""
+        if r["variant"] == "cluster":
+            extra = (f",shipped={r['bytes_shipped']}B"
+                     f",saved_sliced={r['bytes_saved_sliced']}B"
+                     f",blob_hits={r['blob_hits']}")
         print(f"stap_distrib.{r['variant']},workers={r['workers']},"
               f"{r['gates_per_s']}_gates_per_s,"
-              f"x{r['speedup_vs_seq']}", flush=True)
+              f"x{r['speedup_vs_seq']}{extra}", flush=True)
     print(f"stap_distrib.written,{out_path}")
     return rows
 

@@ -143,6 +143,12 @@ def main(workers: int = 2) -> None:
         print(f"[stap] worker-kill drill OK (max|err| {err:.1e}); "
               f"deaths={st['worker_deaths']} resubmits={st['resubmits']} "
               f"replays={st['lineage_replays']}")
+        print(f"[stap] data movement: shipped={st['bytes_shipped']}B, "
+              f"saved by slicing={st['bytes_saved_sliced']}B "
+              f"({st['sliced_args']} sliced args), "
+              f"blob hits/misses={st['blob_hits']}/{st['blob_misses']}, "
+              f"cells shipped/skipped={st['cells_shipped']}/"
+              f"{st['cells_skipped']}")
         print(f"[stap] runtime telemetry: {st}")
     finally:
         rt.shutdown()

@@ -546,6 +546,11 @@ class Emitter:
             self.emit_unit(b)
         self.bound.discard(d.var)
         self.depth -= 2
+        # always emitted (even when empty) so the cluster runtime trusts
+        # the body itself over any stale per-kernel fallback: these are
+        # the arrays whose chunk rows alone satisfy every body access
+        sliceable = tuple(getattr(u, "sliceable", ()) or ())
+        self.w(f"{body_name}.__sliceable__ = {sliceable!r}")
         tile = u.tile if u.tile is not None else "None"
         self.w(f"__pfor_run({body_name}, {affine_py(d.lower)}, "
                f"{affine_py(d.upper)}, {tile})")

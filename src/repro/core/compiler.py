@@ -138,6 +138,7 @@ def compile_kernel(
     # the cluster runtime diffs only schedule-written arrays when
     # gathering pfor chunk results from worker processes
     pfor_cfg.written = tuple(sched.written)
+    pfor_cfg.sliceable = _sliceable_union(sched)
 
     variants: Dict[str, Variant] = {
         "original": Variant("original", fn),
@@ -179,12 +180,23 @@ def compile_kernel(
     return ck
 
 
+def _sliceable_union(sched) -> tuple:
+    """Union of per-unit chunk-sliceable arrays (telemetry + fallback for
+    generated bodies predating the ``__sliceable__`` attribute)."""
+    names = {n
+             for u in schedule_mod._flatten(sched.units)
+             if isinstance(u, schedule_mod.PforUnit)
+             for n in getattr(u, "sliceable", ())}
+    return tuple(sorted(names))
+
+
 def _rebuild_from_entry(fn: Callable, entry: CacheEntry,
                         pfor_cfg: PforConfig,
                         accel_threshold: float) -> Optional[CompiledKernel]:
     """Warm start: dispatcher from stored source, no front-end work."""
     try:
         pfor_cfg.written = tuple(getattr(entry.sched, "written", ()) or ())
+        pfor_cfg.sliceable = _sliceable_union(entry.sched)
         variants: Dict[str, Variant] = {
             "original": Variant("original", fn),
         }

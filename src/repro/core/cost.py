@@ -178,6 +178,7 @@ def cluster_distribute_profitable(
     n_chunks: int = 1,
     local_gflops: float = 1.0,
     overhead_s: float = CLUSTER_TASK_OVERHEAD_S,
+    sliced_bytes: float = 0.0,
 ) -> bool:
     """Local-vs-distributed decision from measured device profiles.
 
@@ -189,7 +190,15 @@ def cluster_distribute_profitable(
     time (transfer + dispatch + compute) beats local execution — so a
     fleet of slow workers behind a thin pipe correctly loses to a fast
     head for small kernels, and per-worker heterogeneity is captured by
-    summing each profile's own rate."""
+    summing each profile's own rate.
+
+    ``payload_bytes`` is the *broadcast* part of the closure — it rides
+    to every worker, so it costs ``n_workers × bytes`` on the head's
+    serial transport. ``sliced_bytes`` is the chunk-sliceable part: the
+    workers collectively receive it exactly once (each gets its rows),
+    so it costs ``bytes`` total regardless of fleet size. The split is
+    what flips marginal kernels with large sliceable inputs to
+    distributed."""
     profiles = list(profiles)
     if not profiles:
         return False
@@ -199,8 +208,9 @@ def cluster_distribute_profitable(
     transport_bs = (min(mbs) if mbs else CLUSTER_TRANSPORT_MBS) * 1e6
     # dispatch is serial on the head (one send per chunk), so the
     # per-chunk overhead does NOT amortize across workers
+    wire_bytes = len(profiles) * payload_bytes + sliced_bytes
     t_dist = (flops / (agg_gflops * 1e9)
-              + len(profiles) * payload_bytes / max(1.0, transport_bs)
+              + wire_bytes / max(1.0, transport_bs)
               + overhead_s * max(1, n_chunks))
     return t_dist < t_local
 

@@ -7,6 +7,10 @@ Client queries (all conservative — "maybe" means "assume dependence"):
     canonicalize identically to NumPy versions)?
   * ``loop_parallel``       — is an explicit loop dependence-free across
     iterations (candidate for the paper's inter-node `pfor`)?
+  * ``access_chunk_sliceable`` / ``sliceable_partition`` — inside a pfor
+    body over `v`, is an array provably indexed *only* by `v` on its
+    leading axis (so a distributed chunk `[lo, hi)` needs just rows
+    `[lo, hi)` shipped, instead of the whole array)?
   * ``distribution_legal``  — may statements that share a loop nest be
     split into separate full-domain operations (paper §4.2: "applies loop
     distribution to split different library calls while maximizing the
@@ -193,7 +197,44 @@ def absorption_write_legal(stmt: CanonStmt, dim: LoopDim) -> bool:
 
 
 # ---------------------------------------------------------------------------
-# Query 2: explicit-loop parallelism (pfor detection)
+# Query 2: chunk sliceability (distributed data movement)
+# ---------------------------------------------------------------------------
+
+def access_chunk_sliceable(acc: VAccess, v: str) -> bool:
+    """May this access be satisfied by shipping only rows ``[lo, hi)`` of
+    the array's leading axis to the worker executing pfor chunk
+    ``v in [lo, hi)``?
+
+    True iff the leading index is *exactly* the pfor iterator (coefficient
+    1, no other terms — an offset like ``A[v+1]`` would step outside the
+    shipped rows) and ``v`` appears in no other index dimension (``W[v,v]``
+    touches a column the chunk's rows don't bound). Whole-array accesses
+    (empty index) read rows outside the chunk and are never sliceable."""
+    if not acc.idx:
+        return False
+    if not (acc.idx[0] - Affine.var(v)).is_zero():
+        return False
+    return all(v not in idx.vars() for idx in acc.idx[1:])
+
+
+def sliceable_partition(accesses_by_array: Dict[str, List[VAccess]],
+                        v: str,
+                        disqualified: frozenset = frozenset()) -> List[str]:
+    """Arrays every one of whose accesses in a pfor body over ``v`` is
+    chunk-sliceable (see :func:`access_chunk_sliceable`); ``disqualified``
+    names arrays with non-affine/unknown accesses (opaque items, FFT
+    whole-array reads, privatized locals) that must ship whole."""
+    out: List[str] = []
+    for array, accs in accesses_by_array.items():
+        if array in disqualified or not accs:
+            continue
+        if all(access_chunk_sliceable(a, v) for a in accs):
+            out.append(array)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Query 3: explicit-loop parallelism (pfor detection)
 # ---------------------------------------------------------------------------
 
 def _collect_canon(items: List[Item]) -> Tuple[List[CanonStmt], bool]:
@@ -291,7 +332,7 @@ def _pins_same_iteration(w: VAccess, a: VAccess, v: str, vp: str) -> bool:
 
 
 # ---------------------------------------------------------------------------
-# Query 3: loop distribution legality
+# Query 4: loop distribution legality
 # ---------------------------------------------------------------------------
 
 def distribution_legal(stmts: List[CanonStmt],
@@ -329,7 +370,7 @@ def distribution_legal(stmts: List[CanonStmt],
 
 
 # ---------------------------------------------------------------------------
-# Query 4: loop fusion legality (core/fusion.py)
+# Query 5: loop fusion legality (core/fusion.py)
 # ---------------------------------------------------------------------------
 
 def fusion_legal(before: List[CanonStmt], after: List[CanonStmt],

@@ -24,6 +24,7 @@ runtime, matching the paper's Ray deployment.
 
 from __future__ import annotations
 
+import inspect
 import math
 from typing import Callable, Optional, Tuple
 
@@ -43,6 +44,37 @@ class PforConfig:
         # arrays the schedule writes (set by the compiler) — lets the
         # cluster runtime diff only real outputs when gathering chunks
         self.written: Tuple[str, ...] = ()
+        # arrays provably indexed only by the pfor var on their leading
+        # axis (union over the kernel's pfor units, set by the compiler).
+        # Fallback only: freshly generated bodies carry their own exact
+        # per-unit ``__sliceable__`` attribute, which always wins; this
+        # covers variants cached before the attribute existed (their
+        # schedules predate the analysis too, so it stays empty — safe).
+        self.sliceable: Tuple[str, ...] = ()
+        # memoized signature probes for the bound runtime (legacy duck-
+        # typed runtimes may predate the broadcast/sliced protocol):
+        # (runtime object, decide accepts sliced_bytes, shards accepts
+        # sliceable) — re-probed only when the runtime is swapped. The
+        # memo holds the probed object itself, never a raw id(): address
+        # reuse after a swap must not resurrect a stale verdict.
+        self._proto_probe: Tuple[object, bool, bool] = (None, True, True)
+
+    def _runtime_proto(self, shards) -> Tuple[bool, bool]:
+        """(decide takes sliced_bytes, pfor_shards takes sliceable) for
+        the current runtime, probed once per binding — not per call."""
+        if self._proto_probe[0] is not self.runtime:
+            def accepts(fn, kw):
+                if fn is None:
+                    return True
+                try:
+                    return kw in inspect.signature(fn).parameters
+                except (TypeError, ValueError):
+                    return True
+            decide = getattr(self.runtime, "distribute_profitable", None)
+            self._proto_probe = (self.runtime,
+                                 accepts(decide, "sliced_bytes"),
+                                 accepts(shards, "sliceable"))
+        return self._proto_probe[1], self._proto_probe[2]
 
     def make_runner(self) -> Callable:
         def __pfor_run(body, lo, hi, tile):
@@ -59,8 +91,17 @@ class PforConfig:
             if shards is not None:
                 # a cluster runtime instance exists, so repro.distrib is
                 # already imported — the shared sizing rule is free here
-                from repro.distrib.serial import payload_nbytes
+                from repro.distrib.serial import payload_split_nbytes
 
+                sliceable = getattr(body, "__sliceable__", None)
+                if sliceable is None:
+                    sliceable = self.sliceable
+                # legacy duck-typed runtimes may predate the broadcast/
+                # sliced protocol: signature-probe once per runtime
+                # binding rather than catching TypeError per call (which
+                # would also swallow genuine errors inside the model)
+                split_ok, shards_sliceable = self._runtime_proto(shards)
+                sliceable = tuple(sliceable) if shards_sliceable else ()
                 # cluster tier: ask the device-profile cost model unless
                 # the caller forced distribution (threshold <= 0)
                 distribute = self.distribute_threshold <= 0
@@ -68,16 +109,27 @@ class PforConfig:
                     decide = getattr(self.runtime,
                                      "distribute_profitable", None)
                     if decide is not None:
-                        distribute = decide(
-                            self.estimated_flops,
-                            payload_nbytes(body),
-                            max(1, math.ceil(n / tile_)))
+                        bcast, sliced = payload_split_nbytes(
+                            body, sliceable)
+                        if split_ok:
+                            distribute = decide(
+                                self.estimated_flops, bcast,
+                                max(1, math.ceil(n / tile_)),
+                                sliced_bytes=sliced)
+                        else:
+                            distribute = decide(
+                                self.estimated_flops, bcast + sliced,
+                                max(1, math.ceil(n / tile_)))
                     else:
                         distribute = (self.estimated_flops
                                       >= self.distribute_threshold)
                 if distribute:
-                    shards(body, lo, hi, tile or self.tile,
-                           written=self.written)
+                    if shards_sliceable:
+                        shards(body, lo, hi, tile or self.tile,
+                               written=self.written, sliceable=sliceable)
+                    else:
+                        shards(body, lo, hi, tile or self.tile,
+                               written=self.written)
                 else:
                     body(lo, hi)
                 return

@@ -18,12 +18,12 @@ Two optimization policies, exactly as the paper states them:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Union
+from typing import Dict, List, Optional, Tuple, Union
 
 from . import dependence
 from .isl_lite import Affine, Domain, LoopDim
 from .scop import (CanonStmt, FFTStmt, Item, LoopItem, OpaqueItem,
-                   ScopProgram, VReduce, vexpr_accesses)
+                   ScopProgram, VAccess, VReduce, vexpr_accesses)
 
 
 # ---------------------------------------------------------------------------
@@ -54,11 +54,16 @@ class SeqLoopUnit:
 @dataclass
 class PforUnit:
     """Iterations of ``dim`` are independent; body units treat dim.var as a
-    bound scalar. ``tile`` is the distribution chunk (None = runtime)."""
+    bound scalar. ``tile`` is the distribution chunk (None = runtime).
+    ``sliceable`` names captured arrays the body provably indexes only by
+    ``dim.var`` on their leading axis — the cluster runtime ships each
+    worker just its chunk's rows of those instead of broadcasting them
+    (set by :func:`_pfor_sliceable` after fusion)."""
 
     dim: LoopDim
     body: List["Unit"]
     tile: Optional[int] = None
+    sliceable: Tuple[str, ...] = ()
 
 
 Unit = Union[RaisedUnit, FFTUnit, OpaqueUnit, SeqLoopUnit, PforUnit]
@@ -176,6 +181,48 @@ def _schedule_items(items: List[Item], depth: int, distribute: bool,
     return units
 
 
+def _pfor_sliceable(u: PforUnit) -> Tuple[str, ...]:
+    """Per-array chunk sliceability for one pfor unit (ISSUE: the
+    data-movement lever). Collects every access each array sees inside
+    the body — reads, writes, aug-reads — and keeps arrays whose accesses
+    are all provably ``arr[v, f(...)]`` with ``v`` the pfor iterator
+    (:func:`dependence.access_chunk_sliceable`). Materialization points
+    (FFT whole-array reads, opaque statements) and privatized locals
+    (full overwrites / compiler temps — they never become closure cells)
+    disqualify their arrays."""
+    v = u.dim.var
+    accesses: Dict[str, List] = {}
+    disq: set = set()
+
+    def add(acc) -> None:
+        accesses.setdefault(acc.array, []).append(acc)
+
+    def walk(units: List[Unit]) -> None:
+        for unit in units:
+            if isinstance(unit, RaisedUnit):
+                s = unit.stmt
+                if s.write_full or s.write_is_temp:
+                    # assigned whole inside the body: a body-local
+                    # (privatized) name, never a shipped closure cell
+                    disq.add(s.write_array)
+                else:
+                    add(VAccess(s.write_array, s.write_idx, s.dtype))
+                for acc in vexpr_accesses(s.rhs):
+                    add(acc)
+            elif isinstance(unit, FFTUnit):
+                disq.add(unit.stmt.src)   # read whole per iteration
+                disq.add(unit.stmt.out)
+            elif isinstance(unit, OpaqueUnit):
+                disq.update(unit.item.reads)
+                disq.update(unit.item.writes)
+            elif isinstance(unit, (SeqLoopUnit, PforUnit)):
+                walk(unit.body)
+
+    walk(u.body)
+    return tuple(dependence.sliceable_partition(
+        accesses, v, frozenset(disq)))
+
+
 def _written_arrays(units: List[Unit]) -> List[str]:
     seen: List[str] = []
 
@@ -209,6 +256,11 @@ def schedule(program: ScopProgram, distribute: bool = True,
         from . import fusion  # deferred: fusion → cost → schedule
         fusion.fuse(sched, profile=fusion_profile)
     sched.written = _written_arrays(sched.units)
+    # chunk-sliceability is a property of the *post-fusion* body: fusion
+    # may rewrite accesses, so the analysis runs on what codegen will emit
+    for u in _flatten(sched.units):
+        if isinstance(u, PforUnit):
+            u.sliceable = _pfor_sliceable(u)
     sched.has_opaque = any(
         isinstance(u, OpaqueUnit) for u in _flatten(sched.units))
     sched.has_pfor = any(

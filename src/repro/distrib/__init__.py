@@ -28,10 +28,14 @@ from .cluster import ClusterRuntime, ClusterTaskError
 from .device import DeviceProfile, measure_profile
 from .objects import ClusterRef, ObjectMeta, ObjectPlane, TaskSpec
 from .placement import PlacementScheduler, PlacementWeights, WorkerView
-from .serial import dumps_fn, loads_fn
+from .serial import (ChunkSlice, ClosureParts, assemble_fn, dumps_fn,
+                     loads_fn, payload_split_nbytes, rebase_chunk,
+                     split_fn)
 
 __all__ = [
-    "ClusterRuntime", "ClusterTaskError", "ClusterRef", "DeviceProfile",
-    "ObjectMeta", "ObjectPlane", "PlacementScheduler", "PlacementWeights",
-    "TaskSpec", "WorkerView", "dumps_fn", "loads_fn", "measure_profile",
+    "ChunkSlice", "ClosureParts", "ClusterRuntime", "ClusterTaskError",
+    "ClusterRef", "DeviceProfile", "ObjectMeta", "ObjectPlane",
+    "PlacementScheduler", "PlacementWeights", "TaskSpec", "WorkerView",
+    "assemble_fn", "dumps_fn", "loads_fn", "measure_profile",
+    "payload_split_nbytes", "rebase_chunk", "split_fn",
 ]

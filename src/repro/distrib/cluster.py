@@ -16,6 +16,12 @@ runtime crosses process boundaries:
     them on demand; every task's serialized spec is its lineage record,
     so objects lost to a worker-process death are replayed on the
     survivors (``kill_worker`` + ``get`` is the recovery drill);
+  * data movement is slice-aware: arrays the schedule proves are indexed
+    only by the pfor var on their leading axis ship as per-chunk row
+    slices (``payload / n_workers`` each) instead of broadcasting, and
+    pfor bodies persist on the workers under content-addressed blob ids
+    so a serving loop re-ships only the cells that changed
+    (``sliced_args`` / ``blob_hits`` / ``cells_skipped`` telemetry);
   * ``cache_dir`` points the runtime at a (shareable) variant-cache
     directory so a fleet of runtimes warm-starts compilation from one
     store (:meth:`compile`).
@@ -30,7 +36,7 @@ import signal
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -38,11 +44,23 @@ from .device import DeviceProfile, measure_profile
 from .objects import (HEAD, LOST, REMOTE, ClusterRef, ObjectPlane,
                       TaskSpec)
 from .placement import PlacementScheduler, PlacementWeights, WorkerView
-from .serial import closure_arrays, dumps_fn
+from .serial import ClosureParts, closure_arrays, dumps_fn, split_fn
 
 
 class ClusterTaskError(RuntimeError):
     pass
+
+
+@dataclass
+class _BlobRec:
+    """One persistent pfor-body identity: (code hash, cell struct sig) →
+    a stable blob id the workers cache under. ``seq`` orders LRU
+    eviction; per-worker shipped state lives on the worker handles (it
+    must die with them)."""
+
+    bid: int
+    key: tuple
+    seq: int = 0
 
 
 @dataclass
@@ -73,12 +91,36 @@ class _WorkerHandle:
         self.alive = True
         self.draining = False   # clean scale-down, not a failure
         self.inflight: set = set()
-        self.blobs: set = set()
+        self.blobs: set = set()                    # bids with skeleton
+        self.blob_cells: Dict[int, Dict[str, str]] = {}  # bid→cell→hash
         self.send_lock = threading.Lock()
 
     def send(self, msg) -> None:
         with self.send_lock:
             self.conn.send(msg)
+
+    def ship_blob(self, bid: int, parts: ClosureParts) -> "Tuple[int, int]":
+        """Bring this worker's cached copy of blob ``bid`` up to date:
+        skeleton if it never saw the body, plus exactly the broadcast
+        cells whose content hash changed since the last ship. Atomic
+        under the send lock so concurrent dispatchers of the same blob
+        don't double-ship (and so the blob always precedes the task
+        message that references it on the pipe). Returns
+        ``(cells_shipped, bytes_shipped)``."""
+        with self.send_lock:
+            shipped = self.blob_cells.setdefault(bid, {})
+            need_skel = bid not in self.blobs
+            delta = {nm: pkl for nm, pkl in parts.cell_pkls.items()
+                     if shipped.get(nm) != parts.cell_hashes[nm]}
+            if not need_skel and not delta:
+                return 0, 0
+            skel = parts.skeleton if need_skel else None
+            self.conn.send(("blob", bid, skel, delta))
+            self.blobs.add(bid)
+            for nm in delta:
+                shipped[nm] = parts.cell_hashes[nm]
+            return len(delta), (len(skel or b"")
+                                + sum(len(p) for p in delta.values()))
 
 
 class ClusterRuntime:
@@ -107,7 +149,12 @@ class ClusterRuntime:
         self._task_ids = itertools.count(1)
         self._wids = itertools.count(0)
         self._blob_ids = itertools.count(1)
-        self._blobs: Dict[int, bytes] = {}
+        # persistent body-blob identities: a serving loop calling the
+        # same compiled kernel re-ships only changed cells, never the
+        # skeleton (LRU-capped; per-worker shipped state is on handles)
+        self._blob_cache: Dict[tuple, _BlobRec] = {}
+        self._blob_seq = itertools.count(1)
+        self.max_cached_blobs = 32
         self._fetch_events: Dict[int, threading.Event] = {}
         self._pongs: Dict[int, "threading.Event"] = {}
         self._shutdown = False
@@ -118,6 +165,13 @@ class ClusterRuntime:
         self.pfor_runs = 0
         self.chunks_dispatched = 0
         self.bytes_shipped = 0
+        # data-movement telemetry (chunk slicing + blob cache)
+        self.sliced_args = 0           # array args shipped as row slices
+        self.bytes_saved_sliced = 0    # vs shipping each chunk the whole
+        self.blob_hits = 0             # pfor calls reusing a cached body
+        self.blob_misses = 0
+        self.cells_shipped = 0         # broadcast cells actually sent
+        self.cells_skipped = 0         # unchanged cells NOT re-sent
         # head-local capability (the "stay local" side of profitability)
         self.local_profile = measure_profile(-1)
         self.variant_cache = None
@@ -383,11 +437,24 @@ class ClusterRuntime:
                     wh.inflight.add(spec.task_id)
                 ts.wid = wid
                 wh.send(("task", spec.task_id, wire))
+                if spec.kind == "chunk":
+                    self._count_chunk_shipment(spec)
                 return
             except (OSError, BrokenPipeError, ValueError):
                 with self._lock:
                     wh.inflight.discard(spec.task_id)
                 time.sleep(0.02)  # worker died under us; replace + retry
+
+    def _count_chunk_shipment(self, spec: TaskSpec) -> None:
+        """Sliced-payload telemetry for one *delivered* chunk task (a
+        worker-death resubmit re-ships for real and re-counts; a failed
+        placement attempt never counts)."""
+        for nm in spec.sliced:
+            full = spec.parts.sliced[nm]
+            chunk_nb = int(full[spec.lo:spec.hi].nbytes)
+            self.sliced_args += 1
+            self.bytes_shipped += chunk_nb
+            self.bytes_saved_sliced += int(full.nbytes) - chunk_nb
 
     def _wire_spec(self, spec: TaskSpec, wh: _WorkerHandle) -> Dict:
         """Encode a task for the wire, resolving every ref arg so the
@@ -416,13 +483,21 @@ class ClusterRuntime:
         wire = {"kind": spec.kind, "out_oid": spec.out.oid,
                 "gather": spec.gather, "args": wire_args}
         if spec.kind == "chunk":
-            if spec.blob_id not in wh.blobs:
-                blob = self._blobs[spec.blob_id]
-                wh.send(("blob", spec.blob_id, blob))
-                wh.blobs.add(spec.blob_id)
-                self.bytes_shipped += len(blob)
+            parts: ClosureParts = spec.parts
+            # blob counters update here because ship_blob really sent
+            # (or raised); sliced counters wait until the task message
+            # itself lands, in _count_chunk_shipment — a placement retry
+            # must not inflate them
+            cells, nbytes = wh.ship_blob(spec.blob_id, parts)
+            self.cells_shipped += cells
+            self.cells_skipped += len(parts.cell_pkls) - cells
+            self.bytes_shipped += nbytes
+            # per-chunk rows of the sliceable arrays: each worker gets
+            # payload/n instead of the whole closure (ROADMAP item #1)
+            sliced_wire = {nm: parts.sliced[nm][spec.lo:spec.hi]
+                           for nm in spec.sliced}
             wire.update(blob_id=spec.blob_id, lo=spec.lo, hi=spec.hi,
-                        written=spec.written)
+                        written=spec.written, sliced=sliced_wire)
         else:
             wire["fn_blob"] = spec.fn_blob
         return wire
@@ -539,22 +614,102 @@ class ClusterRuntime:
         self._dispatch(ts)
 
     # -- pfor sharding (the repro.core.pfor protocol) ----------------------
+    def _blob_for(self, parts: ClosureParts) -> int:
+        """Stable blob id for a body identity (code hash + cell shapes/
+        dtypes). A hit means every worker that already holds the skeleton
+        re-receives at most the cells that changed — the serving-loop
+        fast path."""
+        with self._lock:
+            rec = self._blob_cache.get(parts.blob_key)
+            if rec is not None:
+                rec.seq = next(self._blob_seq)
+                self.blob_hits += 1
+                return rec.bid
+            self.blob_misses += 1
+            rec = _BlobRec(next(self._blob_ids), parts.blob_key,
+                           next(self._blob_seq))
+            self._blob_cache[parts.blob_key] = rec
+            evict = []
+            while len(self._blob_cache) > self.max_cached_blobs:
+                victim = min(self._blob_cache.values(),
+                             key=lambda r: r.seq)
+                del self._blob_cache[victim.key]
+                evict.append(victim.bid)
+            bid = rec.bid
+        for old in evict:
+            self._drop_blob(old)
+        return bid
+
+    def _drop_blob(self, bid: int) -> None:
+        with self._lock:
+            handles = [wh for wh in self._handles.values() if wh.alive]
+        for wh in handles:
+            # under the send lock: ship_blob reads/updates the same
+            # bookkeeping under it, so eviction can't interleave with a
+            # delta ship and desync what the worker actually holds (a
+            # task racing past an eviction still recovers — the worker
+            # errors on the missing blob and the resubmit re-ships it)
+            with wh.send_lock:
+                if bid not in wh.blobs:
+                    continue
+                try:
+                    wh.conn.send(("unblob", bid))
+                except OSError:
+                    pass
+                wh.blobs.discard(bid)
+                wh.blob_cells.pop(bid, None)
+
+    @staticmethod
+    def _merge_updates(arrays: Dict[str, np.ndarray], updates,
+                       spec: TaskSpec) -> None:
+        """Apply one chunk's sparse writes to the head's live arrays.
+        Sliced arrays report chunk-local flat indices (the worker only
+        held rows ``[lo, hi)``): re-base by ``lo`` leading-axis rows.
+        An update for an array the head cannot see is a contract
+        violation — dropping it would silently lose writes."""
+        for name, (idx, vals) in (updates or {}).items():
+            arr = arrays.get(name)
+            if arr is None:
+                raise ClusterTaskError(
+                    f"pfor chunk [{spec.lo}, {spec.hi}) returned writes "
+                    f"for {name!r}, which is not a captured ndarray of "
+                    f"the body — refusing to drop them silently")
+            if name in spec.sliced:
+                stride = 1
+                for d in arr.shape[1:]:
+                    stride *= int(d)
+                idx = np.asarray(idx, dtype=np.int64) + spec.lo * stride
+            arr[np.unravel_index(idx, arr.shape)] = vals
+
     def pfor_shards(self, body, lo: int, hi: int,
                     tile: Optional[int] = None,
-                    written: Sequence[str] = ()) -> None:
+                    written: Sequence[str] = (),
+                    sliceable: Sequence[str] = ()) -> None:
         """Execute a generated pfor body across worker processes.
 
-        The body closure (code + captured arrays) broadcasts once per
-        worker; chunk tasks reference it and return sparse updates for
-        the written arrays, which merge into the head's live arrays —
-        pfor iterations write disjoint regions, so the merge needs no
-        conflict resolution."""
+        The body skeleton + broadcast cells persist on the workers under
+        a content-addressed blob id (re-shipped cell-by-cell only when
+        their hashes change); arrays in ``sliceable`` — proven by the
+        schedule to be indexed only by the pfor var on their leading
+        axis — ship as per-chunk row slices, so their total traffic is
+        ``payload`` instead of ``payload × n_workers``. Chunk tasks
+        return sparse updates for the written arrays, which merge into
+        the head's live arrays — pfor iterations write disjoint regions,
+        so the merge needs no conflict resolution."""
         n = hi - lo
         if n <= 0:
             return
-        blob = dumps_fn(body)
-        bid = next(self._blob_ids)
-        self._blobs[bid] = blob
+        arrays = {n_: v for n_, v in closure_arrays(body).items()
+                  if isinstance(v, np.ndarray)}
+        # trust-but-verify the analysis against the live values: slicing
+        # needs a real ndarray whose leading axis covers the iteration
+        # range (anything else degrades to broadcast, never to an error)
+        slice_names = tuple(
+            nm for nm in dict.fromkeys(sliceable)
+            if nm in arrays and arrays[nm].ndim >= 1
+            and lo >= 0 and arrays[nm].shape[0] >= hi)
+        parts = split_fn(body, slice_names)
+        bid = self._blob_for(parts)
         views = self._views()
         if not views:
             raise ClusterTaskError("no live workers for pfor")
@@ -568,7 +723,7 @@ class ClusterRuntime:
             top = max(v.profile.gflops for v in views)
             weights = [max(v.profile.gflops, 0.25 * top) for v in views]
             ranges = self.scheduler.proportional_chunks(lo, hi, weights)
-        refs = []
+        chunks = []
         for r in ranges:
             if len(r) == 0:
                 continue
@@ -576,61 +731,63 @@ class ClusterRuntime:
             out = self.plane.new_ref(tid)
             spec = TaskSpec(tid, "chunk", None, (), out, blob_id=bid,
                             lo=r.start, hi=r.stop,
-                            written=tuple(written), gather=True)
+                            written=tuple(written),
+                            sliced=slice_names, parts=parts,
+                            gather=True)
             ts = _TaskState(spec)
             with self._lock:
                 self._tasks[tid] = ts
                 self._producer[out.oid] = tid
             self._dispatch(ts)
-            refs.append(out)
+            chunks.append((out, spec))
             self.chunks_dispatched += 1
         self.pfor_runs += 1
-        arrays = {n_: v for n_, v in closure_arrays(body).items()
-                  if isinstance(v, np.ndarray)}
         try:
-            for ref in refs:
+            for ref, spec in chunks:
                 # no per-chunk timeout: a healthy chunk may legitimately
                 # compute for minutes; failures surface via worker-death
                 # resubmission (bounded by max_attempts) instead
                 updates = self.get(ref, timeout=None)
-                for name, (idx, vals) in (updates or {}).items():
-                    arr = arrays.get(name)
-                    if arr is None:
-                        continue
-                    arr[np.unravel_index(idx, arr.shape)] = vals
+                self._merge_updates(arrays, updates, spec)
         finally:
-            self._blobs.pop(bid, None)
             # chunk updates are consumed; their lineage window is over.
             # Drop every per-chunk record so a serving loop calling the
-            # kernel forever holds the head's memory flat.
+            # kernel forever holds the head's memory flat. The blob
+            # stays resident on the workers — that persistence is what
+            # the next call's blob_hit re-uses.
             with self._lock:
-                for ref in refs:
+                for ref, _ in chunks:
                     tid = self._producer.pop(ref.oid, None)
                     if tid is not None:
                         self._tasks.pop(tid, None)
-            for ref in refs:
+            for ref, _ in chunks:
                 self.plane.release(ref.oid)
+            # if another caller's LRU churn evicted this blob while our
+            # chunks were in flight, a dispatch/resubmit may have
+            # resurrected it on some worker after the unblob — with no
+            # head-side record left, nothing would ever free it. Drop it
+            # again now that the run is over.
             with self._lock:
-                handles = [wh for wh in self._handles.values()
-                           if wh.alive]
-            for wh in handles:
-                if bid in wh.blobs:
-                    try:
-                        wh.send(("unblob", bid))
-                    except OSError:
-                        pass
-                    wh.blobs.discard(bid)
+                rec = self._blob_cache.get(parts.blob_key)
+                evicted = rec is None or rec.bid != bid
+            if evicted:
+                self._drop_blob(bid)
 
     def distribute_profitable(self, flops: float, payload_bytes: int,
-                              n_chunks: int) -> bool:
+                              n_chunks: int,
+                              sliced_bytes: float = 0.0) -> bool:
         """Local-vs-distributed decision from the measured device
-        profiles (consumed by :mod:`repro.core.pfor`)."""
+        profiles (consumed by :mod:`repro.core.pfor`).
+        ``payload_bytes`` is the broadcast part of the closure (rides to
+        every worker); ``sliced_bytes`` is the chunk-sliceable part
+        (ships once total, split across workers)."""
         from repro.core import cost
         profiles = self.profiles()
         return cost.cluster_distribute_profitable(
             flops, payload_bytes, profiles,
             max(1, n_chunks),
-            local_gflops=self.local_profile.gflops)
+            local_gflops=self.local_profile.gflops,
+            sliced_bytes=sliced_bytes)
 
     # -- compilation against the shared variant store ----------------------
     def compile(self, fn, **kw):
@@ -702,6 +859,13 @@ class ClusterRuntime:
             "pfor_runs": self.pfor_runs,
             "chunks_dispatched": self.chunks_dispatched,
             "bytes_shipped": self.bytes_shipped,
+            "sliced_args": self.sliced_args,
+            "bytes_saved_sliced": self.bytes_saved_sliced,
+            "blob_hits": self.blob_hits,
+            "blob_misses": self.blob_misses,
+            "cells_shipped": self.cells_shipped,
+            "cells_skipped": self.cells_skipped,
+            "cached_blobs": len(self._blob_cache),
             "plane": self.plane.stats(),
         }
         return out

@@ -62,6 +62,14 @@ class TaskSpec:
     lo: int = 0
     hi: int = 0
     written: Tuple[str, ...] = ()
+    # chunk: arrays shipped as row slices [lo, hi) instead of riding in
+    # the broadcast blob; their gathered updates arrive in chunk-local
+    # coordinates and are re-based by the head
+    sliced: Tuple[str, ...] = ()
+    # chunk: the head-side ClosureParts this spec slices from — a live
+    # reference (never pickled; the wire form is built in _wire_spec),
+    # which is exactly what makes a mid-run replay self-contained
+    parts: Any = None
     gather: bool = False            # force the result inline to the head
     device_pref: str = ""           # '' | 'cpu' | 'gpu'
     est_flops: float = 0.0

@@ -1,8 +1,9 @@
 """Worker-process main loop.
 
 One worker = one OS process holding: a pipe back to the head, a local
-object cache (its shard of the object plane), a cache of deserialized
-pfor body blobs, and the device profile it measured at startup.
+object cache (its shard of the object plane), a cache of pfor body
+blobs (skeleton + broadcast cells, assembled lazily), and the device
+profile it measured at startup.
 
 The loop is deliberately single-threaded: the head resolves every
 object transfer *before* dispatching a task, so a worker never needs to
@@ -12,7 +13,8 @@ by construction.
 Wire protocol (pickled tuples over a ``multiprocessing`` connection —
 the same framing a TCP transport would use):
 
-  head → worker: ("task", tid, spec) | ("blob", bid, bytes)
+  head → worker: ("task", tid, spec)
+                 | ("blob", bid, skeleton_or_None, {cell: value})
                  | ("unblob", bid) | ("get", oid) | ("free", oid)
                  | ("ping", payload) | ("profile",) | ("shutdown",)
   worker → head: ("hello", profile) | ("done", tid, oid, nbytes, payload)
@@ -23,17 +25,25 @@ where ``payload`` is ``("v", value)`` when the value travels with the
 message and ``None`` when it stayed (or was not found) on the worker —
 the wrapper keeps a task that legitimately *returns* ``None``
 distinguishable from a result that was kept remote.
+
+A "blob" message with ``skeleton=None`` is a *delta*: the worker already
+holds the body's skeleton and receives only the cells whose content hash
+changed on the head (the serving-loop path). Blob bodies persist across
+pfor calls; after every chunk the written broadcast cells are rolled
+back to pristine, so the head's record of what each worker holds stays
+content-exact.
 """
 
 from __future__ import annotations
 
+import pickle
 import traceback
 from typing import Any, Dict, Tuple
 
 import numpy as np
 
 from .device import measure_profile
-from .serial import closure_arrays, loads_fn
+from .serial import assemble_fn, closure_arrays, loads_fn, rebase_chunk
 
 # results at or below this many bytes ride back inline with "done"
 INLINE_MAX = 32 * 1024
@@ -47,7 +57,15 @@ def _chunk_updates(body, lo: int, hi: int,
     arrays; the head needs (indices, values) per written array to merge
     into the real ones. ``written`` (from the kernel's schedule) narrows
     the diff to arrays the pfor body can write; when empty we
-    conservatively diff every captured array."""
+    conservatively diff every captured array. Sliced arrays hold only
+    the chunk's rows, so their update indices are chunk-local — the head
+    re-bases them during the gather.
+
+    Written arrays are rolled back to their pre-run contents afterwards
+    (success *or* failure): cached broadcast cells must stay equal to
+    what the head last shipped for the changed-cells-only protocol to be
+    sound, and a retried chunk must never diff against a previous
+    attempt's partial writes."""
     arrays = {n: v for n, v in closure_arrays(body).items()
               if isinstance(v, np.ndarray)}
     targets = {n: a for n, a in arrays.items()
@@ -55,31 +73,59 @@ def _chunk_updates(body, lo: int, hi: int,
     snaps = {n: a.copy() for n, a in targets.items()}
     try:
         body(lo, hi)
-    except BaseException:
-        # roll the cached body's arrays back to pristine: a retry of
-        # this chunk (possibly on this same worker) must not diff
-        # against this attempt's partial writes — values equal to the
-        # poisoned snapshot would silently vanish from the gather
+        updates: Dict[str, tuple] = {}
         for name, arr in targets.items():
-            np.copyto(arr, snaps[name])
-        raise
-    updates: Dict[str, tuple] = {}
-    for name, arr in targets.items():
-        mask = arr != snaps[name]
-        if mask.any():
-            idx = np.flatnonzero(mask.ravel())
-            updates[name] = (idx, arr.ravel()[idx])
-    return updates
+            mask = np.asarray(arr != snaps[name])
+            if mask.any():
+                idx = np.flatnonzero(mask.ravel())
+                updates[name] = (idx, np.asarray(arr.ravel()[idx]))
+        return updates
+    finally:
+        for name, arr in targets.items():
+            np.copyto(np.asarray(arr), snaps[name])
 
 
 class WorkerState:
     def __init__(self, wid: int):
         self.wid = wid
         self.objects: Dict[int, Any] = {}     # local object-plane shard
-        self.bodies: Dict[int, Any] = {}      # blob_id → deserialized fn
-        self.blob_bytes: Dict[int, bytes] = {}
+        self.blob_skel: Dict[int, bytes] = {}
+        self.blob_cells: Dict[int, Dict[str, Any]] = {}
+        self.bodies: Dict[int, tuple] = {}    # bid → (fn, name→cell)
         self.tasks_run = 0
         self.chunks_run = 0
+
+    # -- blob cache --------------------------------------------------------
+    def update_blob(self, bid: int, skeleton, delta: Dict[str, bytes]
+                    ) -> None:
+        """Install a blob skeleton and/or changed broadcast cells. The
+        delta carries the head's per-cell pickles (the exact bytes it
+        content-hashed), so what this worker holds is byte-equal to the
+        head's bookkeeping."""
+        if skeleton is not None:
+            self.blob_skel[bid] = skeleton
+            self.bodies.pop(bid, None)   # re-assemble with the new code
+            self.blob_cells[bid] = {}
+        cells = self.blob_cells.setdefault(bid, {})
+        entry = self.bodies.get(bid)
+        for name, pkl in delta.items():
+            val = pickle.loads(pkl)
+            cells[name] = val
+            if entry is not None and name in entry[1]:
+                # live body: swap the changed cell in place
+                entry[1][name].cell_contents = val
+
+    def drop_blob(self, bid: int) -> None:
+        self.blob_skel.pop(bid, None)
+        self.blob_cells.pop(bid, None)
+        self.bodies.pop(bid, None)
+
+    def _body_for(self, bid: int) -> tuple:
+        entry = self.bodies.get(bid)
+        if entry is None:
+            entry = assemble_fn(self.blob_skel[bid], self.blob_cells[bid])
+            self.bodies[bid] = entry
+        return entry
 
     # -- task execution ---------------------------------------------------
     def resolve_args(self, wire_args) -> list:
@@ -101,13 +147,15 @@ class WorkerState:
 
     def run_task(self, spec) -> Any:
         if spec["kind"] == "chunk":
-            bid = spec["blob_id"]
-            body = self.bodies.get(bid)
-            if body is None:
-                body = loads_fn(self.blob_bytes[bid])
-                self.bodies[bid] = body
+            lo = spec["lo"]
+            body, cellmap = self._body_for(spec["blob_id"])
+            for name, chunk in (spec.get("sliced") or {}).items():
+                # per-chunk rows, re-based so the body's global leading-
+                # axis indices resolve; replaced wholesale on every task,
+                # so nothing to roll back afterwards
+                cellmap[name].cell_contents = rebase_chunk(chunk, lo)
             self.chunks_run += 1
-            return _chunk_updates(body, spec["lo"], spec["hi"],
+            return _chunk_updates(body, lo, spec["hi"],
                                   tuple(spec.get("written") or ()))
         fn = loads_fn(spec["fn_blob"])
         args = self.resolve_args(spec["args"])
@@ -145,11 +193,10 @@ def worker_main(conn, wid: int) -> None:
                     state.objects[oid] = result
                     conn.send(("done", tid, oid, nbytes, None))
             elif kind == "blob":
-                _, bid, blob = msg
-                state.blob_bytes[bid] = blob
+                _, bid, skeleton, delta = msg
+                state.update_blob(bid, skeleton, delta)
             elif kind == "unblob":
-                state.blob_bytes.pop(msg[1], None)
-                state.bodies.pop(msg[1], None)
+                state.drop_blob(msg[1])
             elif kind == "free":
                 # ownership moved to the head (post-fetch): drop our copy
                 state.objects.pop(msg[1], None)

@@ -340,6 +340,56 @@ def test_respawn_restores_fleet_size():
         rt.shutdown()
 
 
+# -- serving-loop soak: blob cache + slicing under fault injection -----------
+
+def _soak_kernel(A: "ndarray[f64,2]", s: "ndarray[f64,1]",
+                 out: "ndarray[f64,1]", N: int, M: int, iters: int):
+    for i in range(0, N):
+        w = 0.1 * s[0:M]
+        for it in range(0, iters):
+            w = w + 0.1 * (s[0:M] - A[i, 0:M] * w[0:M])
+        out[i] = np.dot(w[0:M], A[i, 0:M])
+
+
+def test_soak_serving_loop_blob_cache_flat_memory_and_kill():
+    """A serving loop calling one cluster-compiled kernel 50×, with a
+    worker SIGKILLed mid-run: results stay correct, the head's memory
+    stays flat (no chunk bookkeeping accumulates), the body blob ships
+    once and every later call is a cache hit, and unchanged broadcast
+    cells stop moving after their first ship."""
+    rt = ClusterRuntime(workers=2)
+    try:
+        rng = np.random.default_rng(42)
+        N, M, iters = 32, 16, 8
+        A = rng.normal(size=(N, M)) * 0.1
+        s = rng.normal(size=M)
+        out_ref = np.zeros(N)
+        _soak_kernel(A, s, out_ref, N, M, iters)
+
+        ck = compile_kernel(_soak_kernel, runtime=rt)
+        assert ck.sched.has_pfor
+        ck.pfor_config.distribute_threshold = 0  # force the cluster tier
+        baseline = None
+        for call in range(50):
+            if call == 10:
+                assert rt.kill_worker() is not None
+            out = np.zeros(N)
+            ck.call_variant("np", A, s, out, N, M, iters)
+            assert np.allclose(out, out_ref, atol=1e-12), f"call {call}"
+            if call == 2:
+                st = rt.stats()
+                baseline = (st["plane"]["objects"], st["tasks"])
+        st = rt.stats()
+        assert (st["plane"]["objects"], st["tasks"]) == baseline
+        assert st["blob_misses"] == 1
+        assert st["blob_hits"] == 49
+        assert st["cells_skipped"] > st["cells_shipped"]
+        assert st["sliced_args"] > 0
+        assert st["worker_deaths"] == 1
+    finally:
+        rt.shutdown()
+
+
 # -- shared variant cache ----------------------------------------------------
 
 def _cache_kernel(out: "ndarray[f64,1]", N: int):
