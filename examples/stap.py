@@ -24,7 +24,12 @@ Gates are independent, so the compiler proves the gate loop dependence-
 free (w and R privatize per iteration), emits a ``pfor``, and the
 cluster runtime shards it across OS processes.
 
-    PYTHONPATH=src python examples/stap.py [workers]
+With ``--hetero`` the last worker poses as a GPU (simulated on jax-CPU;
+see ``repro.distrib.device``): codegen's jnp twin of the gate-loop body
+routes to it while the np body runs on the CPU workers — the paper's
+CPU-vs-GPU code-variant selection, fleetwide, gathered into one result.
+
+    PYTHONPATH=src python examples/stap.py [workers] [--hetero]
 """
 
 import sys
@@ -90,7 +95,7 @@ def make_stap_data(gates: int = GATES, k: int = K_TRAIN, dof: int = DOF,
     return snap, train, steer, out
 
 
-def main(workers: int = 2) -> None:
+def main(workers: int = 2, hetero: bool = False) -> None:
     snap, train, steer, out = make_stap_data()
 
     out_ref = out.copy()
@@ -103,11 +108,16 @@ def main(workers: int = 2) -> None:
     print(f"[stap] sequential reference: {t_seq:.3f}s "
           f"({GATES / t_seq:.1f} gates/s)")
 
-    rt = ClusterRuntime(workers=workers)
+    if hetero and workers < 2:
+        sys.exit("--hetero needs >= 2 workers (one CPU + one GPU poser)")
+    sim_gpus = (workers - 1,) if hetero else ()
+    rt = ClusterRuntime(workers=workers, sim_gpu_workers=sim_gpus)
     try:
-        profs = [(p.wid, p.gflops, p.transport_mbs)
+        profs = [(p.wid, p.gflops, p.transport_mbs,
+                  f"gpu:{p.gpu_kind}@{p.gpu_gflops}" if p.has_gpu
+                  else "cpu")
                  for p in rt.profiles()]
-        print(f"[stap] fleet device profiles (wid, GFLOP/s, MB/s): "
+        print(f"[stap] fleet device profiles (wid, GFLOP/s, MB/s, dev): "
               f"{profs}")
         ck = optimize(runtime=rt, workers=workers)(stap_adaptive)
         ck.pfor_config.distribute_threshold = 0  # force the cluster tier
@@ -149,10 +159,20 @@ def main(workers: int = 2) -> None:
               f"blob hits/misses={st['blob_hits']}/{st['blob_misses']}, "
               f"cells shipped/skipped={st['cells_shipped']}/"
               f"{st['cells_skipped']}")
+        if hetero:
+            print(f"[stap] hetero routing: gpu_chunks={st['gpu_chunks']}"
+                  f" cpu_chunks={st['cpu_chunks']} "
+                  f"executed={st['chunks_executed']} "
+                  f"unit_backend={st['unit_backend']}")
+            ran = st["chunks_executed"]
+            assert ran.get("np", 0) > 0 and ran.get("jnp", 0) > 0, \
+                "mixed fleet did not split backends"
         print(f"[stap] runtime telemetry: {st}")
     finally:
         rt.shutdown()
 
 
 if __name__ == "__main__":
-    main(int(sys.argv[1]) if len(sys.argv) > 1 else 2)
+    args = [a for a in sys.argv[1:] if a != "--hetero"]
+    main(int(args[0]) if args else 2,
+         hetero="--hetero" in sys.argv)

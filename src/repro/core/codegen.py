@@ -7,10 +7,21 @@ Two backends, mirroring the paper's §4.3 variants:
     ``.at[]`` updates and written arrays are returned; the dispatcher
     copies results back into the caller's buffers.
 
-The jnp backend is all-or-nothing per kernel, exactly like the paper's CuPy
-conversion: any black-box statement, loop fallback, or pfor makes the
-accelerator variant infeasible (EmitError) and the decision tree keeps the
-optimized-NumPy and original variants.
+The *whole-kernel* jnp variant is all-or-nothing, like the paper's CuPy
+conversion: any black-box statement, loop fallback, or pfor makes it
+infeasible (EmitError) and the decision tree keeps the optimized-NumPy
+and original variants.
+
+Backend selection is additionally **per unit** (the heterogeneous-fleet
+refactor): when a kernel contains pfor units, the np variant emits *two*
+chunk bodies per pfor — the usual in-place NumPy body plus, when the
+unit's own body is accelerator-feasible, a jnp twin (``__pfor_body_N__jnp``)
+that computes through ``__jxp`` (jax.numpy) and lands its writes in place
+into the captured NumPy arrays (``xp.asarray`` at the store), so the
+cluster runtime's sparse-diff gather works unchanged. Both bodies are
+stamped ``__backend__`` and ``__sliceable__``, and the np body carries its
+twin as ``__jnp__`` — the cluster runtime routes each worker's chunks to
+whichever body its device profile prices cheaper.
 """
 
 from __future__ import annotations
@@ -78,6 +89,9 @@ class EmitMeta:
     # their own telemetry (fused statements / contracted intermediates)
     fused_units: int = 0
     contracted_arrays: List[str] = field(default_factory=list)
+    # pfor unit indices that got a jnp twin body (hybrid variant); the
+    # exec namespace must bind __jxp (jax.numpy) when this is non-empty
+    pfor_jnp_units: List[int] = field(default_factory=list)
 
 
 class Emitter:
@@ -93,6 +107,19 @@ class Emitter:
         # shape symbols for locally-defined arrays, emitted lazily right
         # after the defining statement: {array: [sym, …]}
         self.pending_syms: Dict[str, List[str]] = {}
+        # name the backend module is bound to in the generated namespace
+        # ("xp" normally; "__jxp" for the jnp twin of a pfor body, which
+        # lives inside an np-variant whose "xp" is numpy)
+        self.xp = "xp"
+        # also try a jnp twin for each pfor unit (np variant only)
+        self.pfor_jnp = False
+        # hybrid chunk-body mode: compute with jnp but store in place
+        # into *captured* numpy arrays (xp.asarray at the store) so the
+        # worker's sparse-diff gather sees the writes; arrays fully
+        # assigned inside the body are locals (jnp values) and take the
+        # functional .at[] path instead
+        self.store_np_captured = False
+        self.body_locals: Set[str] = set()
 
     def define_syms_for(self, arr: str) -> None:
         for sym in self.pending_syms.pop(arr, []):
@@ -122,13 +149,13 @@ class Emitter:
             if e.fn == "-":
                 return f"(-{inner})"
             if e.fn.startswith("np."):
-                return f"xp.{e.fn[3:]}({inner})"
+                return f"{self.xp}.{e.fn[3:]}({inner})"
             return f"{e.fn}({inner})"
         if isinstance(e, VBin):
             l = self.emit_expr(e.left, frame, hull)
             r = self.emit_expr(e.right, frame, hull)
             if e.op.startswith("np."):
-                return f"xp.{e.op[3:]}({l}, {r})"
+                return f"{self.xp}.{e.op[3:]}({l}, {r})"
             return f"({l} {e.op} {r})"
         if isinstance(e, VAccess):
             return self.emit_access_aligned(e, frame, hull)
@@ -204,7 +231,7 @@ class Emitter:
             if len(order) == 2 and perm == (1, 0):
                 expr = f"{expr}.T"
             else:
-                expr = f"xp.transpose({expr}, {perm})"
+                expr = f"{self.xp}.transpose({expr}, {perm})"
             order = want
         if list(frame) == order:
             return expr
@@ -241,7 +268,7 @@ class Emitter:
         result = self.dot_peephole(spec, op_strs)
         if result is None:
             opt = ", optimize=True" if self.backend == "np" else ""
-            result = (f"xp.einsum('{spec.spec}', "
+            result = (f"{self.xp}.einsum('{spec.spec}', "
                       + ", ".join(op_strs) + opt + ")")
             self.meta.raised_ops.append(f"einsum:{spec.spec}")
         return self.align(result, list(spec.out_vars), frame)
@@ -285,7 +312,7 @@ class Emitter:
             else:
                 return None
         self.meta.raised_ops.append("dot")
-        return f"xp.dot({ea}, {eb})"
+        return f"{self.xp}.dot({ea}, {eb})"
 
     # -- masks --------------------------------------------------------------
     def mask_expr(self, m: MaskOperand, frame, hull: Hull,
@@ -301,7 +328,7 @@ class Emitter:
         k = affine_py(big_k * -1)  # tri offset = -K
         dt = "" if for_einsum else ", dtype=bool"
         # tri(D, O, -K)[d, o] = (o <= d - K) = (d >= o + K)
-        tri = f"xp.tri({n}, {mm}, {k}{dt})"
+        tri = f"{self.xp}.tri({n}, {mm}, {k}{dt})"
         if m.op == ">=":
             return tri
         return f"(1 - {tri})" if for_einsum else f"(~{tri})"
@@ -319,12 +346,12 @@ class Emitter:
             if dep == c and outer == r:
                 big_k = (rlo + off) - clo
                 k = affine_py(big_k - 1)
-                tri = f"xp.tri({rn}, {cn}, {k}, dtype=bool)"
+                tri = f"{self.xp}.tri({rn}, {cn}, {k}, dtype=bool)"
                 terms.append(f"(~{tri})" if op == ">=" else tri)
             elif dep == r and outer == c:
                 big_k = (clo + off) - rlo
                 k = affine_py(big_k * -1)
-                tri = f"xp.tri({rn}, {cn}, {k}, dtype=bool)"
+                tri = f"{self.xp}.tri({rn}, {cn}, {k}, dtype=bool)"
                 terms.append(tri if op == ">=" else f"(~{tri})")
             else:
                 raise RaiseError("mask vars outside frame")
@@ -361,16 +388,27 @@ class Emitter:
 
         arr = stmt.write_array
         if plan.kind in ("full", "scalar"):
+            # whole-name assignment inside a chunk body binds a body
+            # local (privatization) — later partial writes to it take
+            # the functional path in hybrid mode. That path emits
+            # ``.at[]``, so hybrid locals must *be* jnp values even when
+            # the defining expression is pure numpy arithmetic over
+            # captured arrays — force the conversion at the definition
+            # (free for values that are already jnp).
+            self.body_locals.add(arr)
             if stmt.aug is None:
-                self.w(f"{arr} = {expr}")
+                rhs_src = expr
             else:
-                self.w(f"{arr} = {arr} {stmt.aug} ({expr})")
+                rhs_src = f"{arr} {stmt.aug} ({expr})"
+            if self.store_np_captured:
+                rhs_src = f"{self.xp}.asarray({rhs_src})"
+            self.w(f"{arr} = {rhs_src}")
             return
 
         if plan.kind == "diag":
             v = frame[0]
             iv = self.fresh("ix")
-            self.w(f"{iv} = xp.arange({affine_py(hull.lo[v])}, "
+            self.w(f"{iv} = {self.xp}.arange({affine_py(hull.lo[v])}, "
                    f"{affine_py(hull.hi[v])})")
             comps = []
             for idx in stmt.write_idx:
@@ -409,12 +447,18 @@ class Emitter:
                 combined = expr
             else:
                 combined = f"{tgt} {stmt.aug} ({expr})"
-            where = f"xp.where({mv}, {combined}, {tgt})"
+            where = f"{self.xp}.where({mv}, {combined}, {tgt})"
             self._store(arr, sl, tgt, where, None)
 
     def _store(self, arr: str, sl: str, tgt: str, expr: str,
                aug: Optional[str]) -> None:
-        if self.backend == "np":
+        if self.backend == "np" or (self.store_np_captured
+                                    and arr not in self.body_locals):
+            # hybrid jnp body: partial writes to *captured* arrays stay
+            # in-place numpy stores (device→host at the boundary) so the
+            # worker's sparse-diff gather sees them unchanged
+            if self.backend != "np":
+                expr = f"xp.asarray({expr})"
             if aug is None:
                 self.w(f"{tgt} = {expr}")
             else:
@@ -447,7 +491,7 @@ class Emitter:
                         for ia, iw in zip(acc.idx, stmt.write_idx)))]
         if self_reads:
             snap = self.fresh("snap")
-            self.w(f"{snap} = xp.array({stmt.write_array})")
+            self.w(f"{snap} = {self.xp}.array({stmt.write_array})")
             rhs = substitute_array_reads(
                 rhs, stmt.write_array,
                 lambda acc: VAccess(snap, acc.idx, acc.dtype))
@@ -477,12 +521,12 @@ class Emitter:
             inner = self._scalar_expr(e.operand)
             if e.fn == "-":
                 return f"(-{inner})"
-            return f"xp.{e.fn[3:]}({inner})" if e.fn.startswith("np.") \
+            return f"{self.xp}.{e.fn[3:]}({inner})" if e.fn.startswith("np.") \
                 else f"{e.fn}({inner})"
         if isinstance(e, VBin):
             l, r = self._scalar_expr(e.left), self._scalar_expr(e.right)
             if e.op.startswith("np."):
-                return f"xp.{e.op[3:]}({l}, {r})"
+                return f"{self.xp}.{e.op[3:]}({l}, {r})"
             return f"({l} {e.op} {r})"
         if isinstance(e, VAccess):
             comps = [affine_py(i) for i in e.idx]
@@ -500,7 +544,8 @@ class Emitter:
         st = u.stmt
         axis = st.axis if st.axis is not None else -1
         n = f", n={affine_py(st.n)}" if st.n is not None else ""
-        fn = "xp.fft." + st.fn.split(".")[-1]
+        fn = f"{self.xp}.fft." + st.fn.split(".")[-1]
+        self.body_locals.add(st.out)   # whole-name rebind (privatized)
         self.w(f"{st.out} = {fn}({st.src}{n}, axis={axis})")
         self.meta.raised_ops.append("fft")
         self.define_syms_for(st.out)
@@ -526,15 +571,9 @@ class Emitter:
         self.bound.discard(d.var)
         self.depth -= 1
 
-    def emit_pfor(self, u: PforUnit) -> None:
-        if self.backend == "jnp":
-            raise EmitError("pfor: accelerator variant not generated")
-        self.meta.uses_pfor = True
-        idx = self.meta.pfor_count
-        self.meta.pfor_count += 1
+    def _emit_pfor_body(self, u: PforUnit, body_name: str) -> None:
+        """One chunk-body function executing iterations [lo, hi)."""
         d = u.dim
-        body_name = f"__pfor_body_{idx}"
-        # body function: executes iterations [lo, hi)
         self.w(f"def {body_name}(__lo, __hi):")
         self.depth += 1
         self.w(f"for {d.var} in range(__lo, __hi, {d.step}):")
@@ -546,15 +585,58 @@ class Emitter:
             self.emit_unit(b)
         self.bound.discard(d.var)
         self.depth -= 2
+
+    def emit_pfor(self, u: PforUnit) -> None:
+        if self.backend == "jnp":
+            raise EmitError("pfor: accelerator variant not generated")
+        self.meta.uses_pfor = True
+        idx = self.meta.pfor_count
+        self.meta.pfor_count += 1
+        d = u.dim
+        body_name = f"__pfor_body_{idx}"
+        # the jnp twin re-emits the same units, so it needs the same
+        # deferred shape symbols the np body is about to consume
+        pending_before = {k: list(v) for k, v in self.pending_syms.items()}
+        self._emit_pfor_body(u, body_name)
         # always emitted (even when empty) so the cluster runtime trusts
         # the body itself over any stale per-kernel fallback: these are
         # the arrays whose chunk rows alone satisfy every body access
         sliceable = tuple(getattr(u, "sliceable", ()) or ())
         self.w(f"{body_name}.__sliceable__ = {sliceable!r}")
+        self.w(f"{body_name}.__backend__ = 'np'")
+        if self.pfor_jnp and getattr(u, "jnp_feasible", True):
+            jnp_name = self._try_emit_jnp_twin(u, body_name, idx,
+                                               pending_before)
+            if jnp_name is not None:
+                self.w(f"{jnp_name}.__sliceable__ = {sliceable!r}")
+                self.w(f"{jnp_name}.__backend__ = 'jnp'")
+                self.w(f"{body_name}.__jnp__ = {jnp_name}")
+                self.meta.pfor_jnp_units.append(idx)
         tile = u.tile if u.tile is not None else "None"
         self.w(f"__pfor_run({body_name}, {affine_py(d.lower)}, "
                f"{affine_py(d.upper)}, {tile})")
         self.meta.raised_ops.append("pfor")
+
+    def _try_emit_jnp_twin(self, u: PforUnit, body_name: str, idx: int,
+                           pending_syms: Dict[str, List[str]]
+                           ) -> Optional[str]:
+        """Emit the accelerator twin of one pfor body, or None when the
+        unit's body is jnp-infeasible (loop fallback / black box). The
+        twin is a separate function scope, so its temp names and body
+        locals are independent of the np body's."""
+        jnp_name = f"{body_name}__jnp"
+        sub = Emitter(self.s, "jnp")
+        sub.xp = "__jxp"
+        sub.store_np_captured = True
+        sub.depth = self.depth
+        sub.bound = set(self.bound)
+        sub.pending_syms = pending_syms
+        try:
+            sub._emit_pfor_body(u, jnp_name)
+        except (EmitError, RaiseError):
+            return None
+        self.lines.extend(sub.lines)
+        return jnp_name
 
     def emit_unit(self, u: Unit) -> None:
         if isinstance(u, RaisedUnit):
@@ -662,10 +744,15 @@ class GeneratedVariant:
     written: List[str]
 
 
-def generate(sched: Schedule, backend: str) -> GeneratedVariant:
+def generate(sched: Schedule, backend: str,
+             pfor_jnp: bool = False) -> GeneratedVariant:
+    """``pfor_jnp=True`` (np backend only) additionally emits a jnp twin
+    for every accelerator-feasible pfor body — the per-unit backend
+    variants the heterogeneous cluster routes between."""
     fn = sched.program.fn
     param_names = [n for n, _ in fn.params]
     em = Emitter(sched, backend)
+    em.pfor_jnp = bool(pfor_jnp) and backend == "np"
     if sched.fusion is not None:
         em.meta.fused_units = sched.fusion.fused_units
         em.meta.contracted_arrays = list(sched.fusion.contracted_arrays)

@@ -70,21 +70,39 @@ def _resolved_type_sig(fn: Callable,
     return type_signature(anns, names)
 
 
+def _jnp_module():
+    """jax.numpy with x64 enabled, or None when jax is unavailable.
+
+    Numeric kernels carry float64 semantics (PolyBench); the LM stack
+    requests bf16/f32 explicitly so enabling x64 globally is safe."""
+    try:
+        import jax
+
+        jax.config.update("jax_enable_x64", True)
+        import jax.numpy as jnp
+    except Exception:
+        return None
+    return jnp
+
+
 def _make_np_variant(gen_np: codegen.GeneratedVariant,
                      pfor_cfg: PforConfig) -> Variant:
-    np_fn = _exec_variant(gen_np, np, {"__pfor_run": pfor_cfg.make_runner()})
+    extra = {"__pfor_run": pfor_cfg.make_runner()}
+    if getattr(gen_np.meta, "pfor_jnp_units", None):
+        # hybrid variant: pfor bodies carry jnp twins computing through
+        # __jxp — the namespace must bind it before any body runs
+        jnp = _jnp_module()
+        if jnp is None:
+            raise codegen.EmitError(
+                "hybrid np variant references jax, which is unavailable")
+        extra["__jxp"] = jnp
+    np_fn = _exec_variant(gen_np, np, extra)
     return Variant("np", np_fn, gen_np)
 
 
 def _make_jnp_variant(gen_jnp: codegen.GeneratedVariant) -> Optional[Variant]:
-    try:
-        import jax
-
-        # Numeric kernels carry float64 semantics (PolyBench); the LM
-        # stack requests bf16/f32 explicitly so this is safe globally.
-        jax.config.update("jax_enable_x64", True)
-        import jax.numpy as jnp
-    except Exception:
+    jnp = _jnp_module()
+    if jnp is None:
         return None
     jnp_fn = _exec_variant(gen_jnp, jnp, {})
     return Variant("jnp", jnp_fn, gen_jnp)
@@ -112,7 +130,17 @@ def compile_kernel(
     # backend tag carries every option that changes the *generated code*
     # (schedule shape included); runtime knobs (tile/workers/thresholds)
     # live in PforConfig / dispatch state rebuilt fresh on every load.
-    backend_tag = ("np+jnp" if enable_jax else "np") \
+    # "jnpu" = per-unit jnp twins inside pfor bodies — a new token so
+    # pre-hetero cache entries (np-only bodies) miss instead of serving
+    # stale code. The token is earned only when jax is *actually*
+    # importable: a twin-less compile on a jax-less host files under the
+    # legacy "np+jnp" tag, so installing jax later recompiles with twins
+    # instead of serving the twin-less entry forever. The probe costs a
+    # one-time jax import per process (already paid by any non-pfor
+    # kernel's whole-jnp variant).
+    jax_ok = enable_jax and _jnp_module() is not None
+    backend_tag = (("np+jnpu" if jax_ok else "np+jnp")
+                   if enable_jax else "np") \
         + (":dist" if distribute else ":nodist") \
         + (":fuse" if fuse else ":nofuse")
     src_h = type_sig = None
@@ -144,11 +172,19 @@ def compile_kernel(
         "original": Variant("original", fn),
     }
 
-    # Optimized NumPy variant (always attempted; falls back statement-wise)
-    gen_np = codegen.generate(sched, "np")
+    # Optimized NumPy variant (always attempted; falls back statement-wise).
+    # With pfor units and jax available it is a *hybrid*: seq units stay
+    # np, every accelerator-feasible pfor body gets a jnp twin the
+    # cluster routes GPU-capable workers to (per-unit backend variants —
+    # no longer all-or-nothing like the paper's CuPy conversion). Twins
+    # are generated eagerly (not on first cluster dispatch) so the
+    # cached entry is self-contained and a runtime can be bound to the
+    # compiled kernel later — the cost is one extra codegen pass here.
+    hybrid = jax_ok and sched.has_pfor
+    gen_np = codegen.generate(sched, "np", pfor_jnp=hybrid)
     variants["np"] = _make_np_variant(gen_np, pfor_cfg)
 
-    # Accelerator variant — all-or-nothing, like the paper's CuPy conversion
+    # Whole-kernel accelerator variant (pfor-free kernels only)
     if enable_jax and not sched.has_opaque and not sched.has_pfor:
         try:
             # with fusion off both profiles schedule identically

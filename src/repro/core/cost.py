@@ -152,6 +152,15 @@ ACCEL_DISPATCH_OVERHEAD_S = 2e-3
 # Distributing a pfor across workers is worth it above this much work.
 DISTRIBUTE_FLOP_THRESHOLD = 1e7
 
+# Per-chunk accelerator launch overhead on a worker (host→device staging
+# + kernel dispatch for the jnp twin of a pfor body); conservative so
+# tiny chunks stay on the np body.
+GPU_CHUNK_OVERHEAD_S = 5e-3
+
+# Host↔device staging bandwidth fallback when the profile carries no
+# measured number (PCIe-gen3-ish, in GB/s).
+GPU_XFER_GBS = 12.0
+
 # Fixed per-task cost of dispatching one chunk to a worker process
 # (serialize + pipe + schedule); measured on the container's pipes.
 CLUSTER_TASK_OVERHEAD_S = 1.5e-3
@@ -213,6 +222,77 @@ def cluster_distribute_profitable(
               + wire_bytes / max(1.0, transport_bs)
               + overhead_s * max(1, n_chunks))
     return t_dist < t_local
+
+
+# ---------------------------------------------------------------------------
+# Per-(unit, backend, worker-profile) pricing (heterogeneous chunk routing)
+# ---------------------------------------------------------------------------
+
+def chunk_backend_seconds(flops: float, nbytes: float, profile,
+                          backend: str) -> float:
+    """Estimated seconds for one pfor chunk of ``flops``/``nbytes`` on
+    ``profile`` executing the ``backend`` body — the roofline max of the
+    compute and data-movement terms, plus the accelerator's per-chunk
+    launch overhead. This is the cell of the (unit, backend, worker)
+    table the cluster prices instead of one kernel-level threshold.
+
+    A *simulated* GPU (``gpu_kind == "sim"``: jax-CPU posing for
+    laptops/CI) prices like an integrated accelerator — no staging
+    overhead, memory bandwidth as the transfer term — so CI-sized
+    problems still exercise heterogeneous routing; real devices keep
+    the honest PCIe-ish terms."""
+    if backend == "jnp":
+        rate = max(1e-3, getattr(profile, "gpu_gflops", 0.0))
+        if getattr(profile, "gpu_kind", "") == "sim":
+            xfer_gbs = max(1e-3, getattr(profile, "membw_gbs", 1.0))
+            overhead = 0.0
+        else:
+            xfer_gbs = GPU_XFER_GBS
+            overhead = GPU_CHUNK_OVERHEAD_S
+    else:
+        rate = max(1e-3, getattr(profile, "gflops", 1.0))
+        xfer_gbs = max(1e-3, getattr(profile, "membw_gbs", 1.0))
+        overhead = 0.0
+    return max(flops / (rate * 1e9),
+               nbytes / (xfer_gbs * 1e9)) + overhead
+
+
+def pick_chunk_backend(flops: float, nbytes: float, profile,
+                       allow_jnp: bool = True) -> str:
+    """Choose the cheaper body backend for one worker's chunk.
+
+    Only workers with a (real or simulated) GPU ever run the jnp twin;
+    for them the decision is the priced two-sided estimate. A zero FLOP
+    estimate (direct calls that bypassed the dispatcher) degrades to
+    capability tags: a GPU worker takes the jnp body when one exists."""
+    if (not allow_jnp or not getattr(profile, "has_gpu", False)
+            or getattr(profile, "gpu_gflops", 0.0) <= 0):
+        return "np"
+    if flops <= 0:
+        return "jnp"
+    t_jnp = chunk_backend_seconds(flops, nbytes, profile, "jnp")
+    t_np = chunk_backend_seconds(flops, nbytes, profile, "np")
+    return "jnp" if t_jnp < t_np else "np"
+
+
+def unit_backend_table(flops_per_worker: float, nbytes_per_worker: float,
+                       profiles: Iterable, allow_jnp: bool = True
+                       ) -> List[str]:
+    """Backend choice per worker profile for one pfor unit (in profile
+    order) — the row of the (unit, backend, worker) pricing table the
+    sharder consumes."""
+    return [pick_chunk_backend(flops_per_worker, nbytes_per_worker, p,
+                               allow_jnp)
+            for p in profiles]
+
+
+def backend_effective_gflops(profile, backend: str) -> float:
+    """Throughput of ``profile`` when running its chosen backend — the
+    chunk-sizing weight for heterogeneous fleets (a GPU worker on the
+    jnp body earns a proportionally larger chunk)."""
+    if backend == "jnp":
+        return max(1e-3, getattr(profile, "gpu_gflops", 0.0))
+    return max(1e-3, getattr(profile, "gflops", 1.0))
 
 
 def calibrate_accel_threshold(

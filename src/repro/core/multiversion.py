@@ -270,8 +270,18 @@ class CompiledKernel:
             "fused_units": getattr(fusion, "fused_units", 0),
             "contracted_arrays": len(
                 getattr(fusion, "contracted_arrays", ()) or ()),
+            "pfor_jnp_units": len(self.pfor_jnp_units()),
             "from_cache": self.from_cache,
         }
+
+    def pfor_jnp_units(self) -> List[int]:
+        """pfor unit indices whose np body carries a jnp twin — the
+        per-unit backend variants the heterogeneous cluster routes
+        between (empty for pfor-free or np-only kernels)."""
+        v = self.variants.get("np")
+        if v is None or v.generated is None:
+            return []
+        return list(getattr(v.generated.meta, "pfor_jnp_units", ()) or ())
 
     def call_variant(self, name: str, *args, **kwargs):
         """Force a specific variant (benchmark harness hook)."""
@@ -325,6 +335,12 @@ class CompiledKernel:
             lines.append(
                 f"  fusion: {fusion.fused_units} fused unit(s), "
                 f"contracted {list(fusion.contracted_arrays)}")
+        jnp_units = self.pfor_jnp_units()
+        if jnp_units:
+            lines.append(
+                f"  hetero: pfor unit(s) {jnp_units} carry jnp twin "
+                "bodies — the cluster prices np-vs-jnp per worker "
+                "profile and routes chunks by device_pref")
         for name, v in self.variants.items():
             ops = (v.generated.meta.raised_ops if v.generated else [])
             lines.append(f"  variant {name}: calls={v.calls} "

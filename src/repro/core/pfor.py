@@ -54,14 +54,17 @@ class PforConfig:
         # memoized signature probes for the bound runtime (legacy duck-
         # typed runtimes may predate the broadcast/sliced protocol):
         # (runtime object, decide accepts sliced_bytes, shards accepts
-        # sliceable) — re-probed only when the runtime is swapped. The
-        # memo holds the probed object itself, never a raw id(): address
-        # reuse after a swap must not resurrect a stale verdict.
-        self._proto_probe: Tuple[object, bool, bool] = (None, True, True)
+        # sliceable, shards accepts est_flops) — re-probed only when the
+        # runtime is swapped. The memo holds the probed object itself,
+        # never a raw id(): address reuse after a swap must not
+        # resurrect a stale verdict.
+        self._proto_probe: Tuple[object, bool, bool, bool] = (
+            None, True, True, True)
 
-    def _runtime_proto(self, shards) -> Tuple[bool, bool]:
-        """(decide takes sliced_bytes, pfor_shards takes sliceable) for
-        the current runtime, probed once per binding — not per call."""
+    def _runtime_proto(self, shards) -> Tuple[bool, bool, bool]:
+        """(decide takes sliced_bytes, pfor_shards takes sliceable,
+        pfor_shards takes est_flops) for the current runtime, probed
+        once per binding — not per call."""
         if self._proto_probe[0] is not self.runtime:
             def accepts(fn, kw):
                 if fn is None:
@@ -73,8 +76,9 @@ class PforConfig:
             decide = getattr(self.runtime, "distribute_profitable", None)
             self._proto_probe = (self.runtime,
                                  accepts(decide, "sliced_bytes"),
-                                 accepts(shards, "sliceable"))
-        return self._proto_probe[1], self._proto_probe[2]
+                                 accepts(shards, "sliceable"),
+                                 accepts(shards, "est_flops"))
+        return self._proto_probe[1:]
 
     def make_runner(self) -> Callable:
         def __pfor_run(body, lo, hi, tile):
@@ -100,7 +104,8 @@ class PforConfig:
                 # sliced protocol: signature-probe once per runtime
                 # binding rather than catching TypeError per call (which
                 # would also swallow genuine errors inside the model)
-                split_ok, shards_sliceable = self._runtime_proto(shards)
+                split_ok, shards_sliceable, shards_flops = \
+                    self._runtime_proto(shards)
                 sliceable = tuple(sliceable) if shards_sliceable else ()
                 # cluster tier: ask the device-profile cost model unless
                 # the caller forced distribution (threshold <= 0)
@@ -124,12 +129,15 @@ class PforConfig:
                         distribute = (self.estimated_flops
                                       >= self.distribute_threshold)
                 if distribute:
+                    kw = {"written": self.written}
                     if shards_sliceable:
-                        shards(body, lo, hi, tile or self.tile,
-                               written=self.written, sliceable=sliceable)
-                    else:
-                        shards(body, lo, hi, tile or self.tile,
-                               written=self.written)
+                        kw["sliceable"] = sliceable
+                    if shards_flops:
+                        # the dispatcher's kernel-level FLOP estimate:
+                        # the sharder prices per-(unit, backend, worker)
+                        # cells from it when the body carries a jnp twin
+                        kw["est_flops"] = self.estimated_flops
+                    shards(body, lo, hi, tile or self.tile, **kw)
                 else:
                     body(lo, hi)
                 return

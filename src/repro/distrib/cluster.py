@@ -40,11 +40,12 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .device import DeviceProfile, measure_profile
+from .device import DeviceProfile, measure_profile, sim_gpu_for
 from .objects import (HEAD, LOST, REMOTE, ClusterRef, ObjectPlane,
                       TaskSpec)
 from .placement import PlacementScheduler, PlacementWeights, WorkerView
-from .serial import ClosureParts, closure_arrays, dumps_fn, split_fn
+from .serial import (ClosureParts, closure_arrays, dumps_fn,
+                     split_fn_variants)
 
 
 class ClusterTaskError(RuntimeError):
@@ -82,10 +83,11 @@ class _TaskState:
 
 
 class _WorkerHandle:
-    def __init__(self, wid: int, proc, conn):
+    def __init__(self, wid: int, proc, conn, sim_gpu: bool = False):
         self.wid = wid
         self.proc = proc
         self.conn = conn
+        self.sim_gpu = sim_gpu   # respawns inherit the GPU pose
         self.profile: Optional[DeviceProfile] = None
         self.hello = threading.Event()
         self.alive = True
@@ -97,7 +99,25 @@ class _WorkerHandle:
 
     def send(self, msg) -> None:
         with self.send_lock:
-            self.conn.send(msg)
+            try:
+                self.conn.send(msg)
+            except TypeError as exc:
+                # mp.Connection.close() nulls its handle without a lock;
+                # a send racing a concurrent close can reach os.write
+                # with handle=None → "TypeError: 'NoneType' object
+                # cannot be interpreted as an integer". The connection
+                # is dead either way — surface it as the OSError every
+                # caller already handles (tracked flaky, pre-PR5).
+                raise OSError(f"connection closed under send: {exc}")
+
+    def close_conn(self) -> None:
+        """Close the pipe without racing an in-flight :meth:`send` (the
+        lock serializes us behind it; later sends fail cleanly)."""
+        with self.send_lock:
+            try:
+                self.conn.close()
+            except OSError:
+                pass
 
     def ship_blob(self, bid: int, parts: ClosureParts) -> "Tuple[int, int]":
         """Bring this worker's cached copy of blob ``bid`` up to date:
@@ -132,10 +152,23 @@ class ClusterRuntime:
                  respawn: bool = True,
                  cache_dir: Optional[str] = None,
                  weights: PlacementWeights = PlacementWeights(),
-                 hello_timeout_s: float = 30.0):
+                 hello_timeout_s: float = 30.0,
+                 sim_gpu_workers: Sequence[int] = ()):
         if start_method is None:
-            start_method = ("fork" if "fork" in mp.get_all_start_methods()
-                            else "spawn")
+            # GPU-capable workers (real or posing) may execute jnp twin
+            # bodies, and XLA does not survive a fork of a head that has
+            # already touched jax — those fleets must spawn fresh
+            # interpreters. CPU-only fleets keep the fast fork default.
+            gpu_possible = (bool(sim_gpu_workers)
+                            or os.environ.get("REPRO_DISTRIB_SIM_GPU")
+                            or os.environ.get("REPRO_DISTRIB_PROBE_GPU")
+                            == "1")
+            if gpu_possible:
+                start_method = "spawn"
+            else:
+                start_method = ("fork"
+                                if "fork" in mp.get_all_start_methods()
+                                else "spawn")
         self._ctx = mp.get_context(start_method)
         self.start_method = start_method
         self.max_attempts = max_attempts
@@ -165,6 +198,15 @@ class ClusterRuntime:
         self.pfor_runs = 0
         self.chunks_dispatched = 0
         self.bytes_shipped = 0
+        # heterogeneous routing telemetry: chunks dispatched per chosen
+        # body backend, per-pfor-body backend mix, and — the ground
+        # truth — chunks whose "done" message confirmed execution per
+        # backend (dispatch intent can be overtaken by an error-path
+        # downgrade)
+        self.gpu_chunks = 0            # chunks dispatched on the jnp twin
+        self.cpu_chunks = 0            # chunks dispatched on the np body
+        self.unit_backend: Dict[str, Dict[str, int]] = {}
+        self.chunks_executed: Dict[str, int] = {}
         # data-movement telemetry (chunk slicing + blob cache)
         self.sliced_args = 0           # array args shipped as row slices
         self.bytes_saved_sliced = 0    # vs shipping each chunk the whole
@@ -178,24 +220,29 @@ class ClusterRuntime:
         if cache_dir is not None:
             from repro.profiler.cache import VariantCache
             self.variant_cache = VariantCache(cache_dir)
-        for _ in range(workers):
-            self._spawn_worker()
+        sim_set = set(sim_gpu_workers)
+        for i in range(workers):
+            self._spawn_worker(sim_gpu=i in sim_set)
         self._await_hellos(hello_timeout_s)
         self._reprofile_sequentially()
         self._measure_transport()
 
     # -- worker lifecycle -------------------------------------------------
-    def _spawn_worker(self) -> _WorkerHandle:
+    def _spawn_worker(self, sim_gpu: bool = False) -> _WorkerHandle:
         from .worker import worker_main
         wid = next(self._wids)
+        # resolve the env-var pose here (not in the worker): a respawn
+        # gets a fresh wid that would no longer match the env wid list,
+        # and the replacement must inherit its predecessor's pose
+        sim_gpu = sim_gpu or sim_gpu_for(wid)
         head_conn, worker_conn = self._ctx.Pipe(duplex=True)
         proc = self._ctx.Process(target=worker_main,
-                                 args=(worker_conn, wid),
+                                 args=(worker_conn, wid, sim_gpu),
                                  name=f"cluster-worker-{wid}",
                                  daemon=True)
         proc.start()
         worker_conn.close()  # child's end lives in the child now
-        wh = _WorkerHandle(wid, proc, head_conn)
+        wh = _WorkerHandle(wid, proc, head_conn, sim_gpu=sim_gpu)
         with self._lock:
             self._handles[wid] = wh
         t = threading.Thread(target=self._recv_loop, args=(wh,),
@@ -260,6 +307,12 @@ class ClusterRuntime:
                 msg = wh.conn.recv()
             except (EOFError, OSError):
                 break
+            except Exception:
+                # e.g. TypeError when a concurrent close() nulled the
+                # handle mid-read: any recv failure means the connection
+                # is unusable — treat it as the worker's death, never as
+                # a reason to crash the receiver thread
+                break
             try:
                 self._handle(wh, msg)
             except Exception:
@@ -272,7 +325,15 @@ class ClusterRuntime:
             wh.profile = DeviceProfile.from_dict(msg[1])
             wh.hello.set()
         elif kind == "done":
-            _, tid, oid, nbytes, payload = msg
+            _, tid, oid, nbytes, payload = msg[:5]
+            ran = msg[5] if len(msg) > 5 else None
+            if ran is not None:
+                # what actually *executed* (vs the dispatch-intent
+                # gpu_chunks/cpu_chunks counters, which a mid-flight
+                # backend downgrade can overtake)
+                with self._lock:
+                    self.chunks_executed[ran] = \
+                        self.chunks_executed.get(ran, 0) + 1
             if payload is not None:
                 self.plane.fulfill_inline(oid, payload[1])
             else:
@@ -292,6 +353,7 @@ class ClusterRuntime:
                 return
             ts.spec.attempts += 1
             if ts.spec.attempts < self.max_attempts and not self._shutdown:
+                self._maybe_downgrade_backend(ts.spec)
                 self.resubmits += 1
                 threading.Thread(target=self._dispatch, args=(ts,),
                                  daemon=True).start()
@@ -328,16 +390,13 @@ class ClusterRuntime:
             inflight = list(wh.inflight)
             wh.inflight.clear()
             clean = self._shutdown or wh.draining
-        try:
-            wh.conn.close()
-        except OSError:
-            pass
+        wh.close_conn()
         if clean:
             return
         self.worker_deaths += 1
         self.plane.mark_worker_lost(wh.wid)
         if self.respawn:
-            nw = self._spawn_worker()
+            nw = self._spawn_worker(sim_gpu=wh.sim_gpu)
             if nw.hello.wait(10.0):
                 # the boot-time probe may have contended with whatever
                 # killed its predecessor: re-measure like at startup so
@@ -361,6 +420,17 @@ class ClusterRuntime:
             self.resubmits += 1
             threading.Thread(target=self._dispatch, args=(ts,),
                              daemon=True).start()
+
+    @staticmethod
+    def _maybe_downgrade_backend(spec: TaskSpec) -> None:
+        """A chunk that *errored* on a worker retries on the np fallback
+        body when it was running an accelerator twin — a worker whose
+        jax is broken/missing must not burn every attempt on it."""
+        if spec.kind == "chunk" and spec.backend != "np" \
+                and spec.alt is not None:
+            spec.backend, spec.blob_id, spec.parts = spec.alt
+            spec.alt = None
+            spec.device_pref = "cpu"
 
     # -- placement + dispatch ---------------------------------------------
     def _views(self) -> List[WorkerView]:
@@ -446,9 +516,13 @@ class ClusterRuntime:
                 time.sleep(0.02)  # worker died under us; replace + retry
 
     def _count_chunk_shipment(self, spec: TaskSpec) -> None:
-        """Sliced-payload telemetry for one *delivered* chunk task (a
-        worker-death resubmit re-ships for real and re-counts; a failed
-        placement attempt never counts)."""
+        """Sliced-payload + backend-routing telemetry for one *delivered*
+        chunk task (a worker-death resubmit re-ships for real and
+        re-counts; a failed placement attempt never counts)."""
+        if spec.backend == "jnp":
+            self.gpu_chunks += 1
+        else:
+            self.cpu_chunks += 1
         for nm in spec.sliced:
             full = spec.parts.sliced[nm]
             chunk_nb = int(full[spec.lo:spec.hi].nbytes)
@@ -497,7 +571,8 @@ class ClusterRuntime:
             sliced_wire = {nm: parts.sliced[nm][spec.lo:spec.hi]
                            for nm in spec.sliced}
             wire.update(blob_id=spec.blob_id, lo=spec.lo, hi=spec.hi,
-                        written=spec.written, sliced=sliced_wire)
+                        written=spec.written, sliced=sliced_wire,
+                        backend=spec.backend)
         else:
             wire["fn_blob"] = spec.fn_blob
         return wire
@@ -684,7 +759,8 @@ class ClusterRuntime:
     def pfor_shards(self, body, lo: int, hi: int,
                     tile: Optional[int] = None,
                     written: Sequence[str] = (),
-                    sliceable: Sequence[str] = ()) -> None:
+                    sliceable: Sequence[str] = (),
+                    est_flops: float = 0.0) -> None:
         """Execute a generated pfor body across worker processes.
 
         The body skeleton + broadcast cells persist on the workers under
@@ -695,7 +771,18 @@ class ClusterRuntime:
         ``payload`` instead of ``payload × n_workers``. Chunk tasks
         return sparse updates for the written arrays, which merge into
         the head's live arrays — pfor iterations write disjoint regions,
-        so the merge needs no conflict resolution."""
+        so the merge needs no conflict resolution.
+
+        Heterogeneous routing: when the body carries a jnp twin
+        (``body.__jnp__``, emitted per pfor unit by codegen), each
+        worker's backend is priced from its device profile
+        (:func:`repro.core.cost.pick_chunk_backend` over ``est_flops``
+        and the payload bytes), chunks are sized by the *chosen-backend*
+        throughput, and placement routes them via ``device_pref`` — so a
+        mixed fleet runs GPU workers on the jnp body and CPU workers on
+        the np body of the same pfor, gathered into one result. Both
+        bodies share the content-addressed cell store, so serving-loop
+        blob reuse survives backend tagging."""
         n = hi - lo
         if n <= 0:
             return
@@ -708,32 +795,72 @@ class ClusterRuntime:
             nm for nm in dict.fromkeys(sliceable)
             if nm in arrays and arrays[nm].ndim >= 1
             and lo >= 0 and arrays[nm].shape[0] >= hi)
-        parts = split_fn(body, slice_names)
-        bid = self._blob_for(parts)
+        bodies = {"np": body}
+        jnp_body = getattr(body, "__jnp__", None)
+        if jnp_body is not None:
+            bodies["jnp"] = jnp_body
+        parts_by = split_fn_variants(bodies, slice_names)
         views = self._views()
         if not views:
             raise ClusterTaskError("no live workers for pfor")
+        # price the (unit, backend, worker) cells: each view gets the
+        # backend whose roofline+transport estimate is cheaper for its
+        # expected share of the iteration space
+        from repro.core import cost as cost_model
+        per_bytes = (sum(int(a.nbytes) for a in
+                         parts_by["np"].sliced.values()) / len(views)
+                     + parts_by["np"].broadcast_nbytes())
+        backends = cost_model.unit_backend_table(
+            est_flops / len(views), per_bytes,
+            [v.profile for v in views],
+            allow_jnp=jnp_body is not None)
+        hetero = len(set(backends)) > 1 or (jnp_body is not None
+                                            and "jnp" in backends)
+        # register every blob this run may use ("np" always: it is the
+        # error-path fallback for jnp chunks); workers receive a blob
+        # only when a chunk referencing it is dispatched to them
+        bids = {bk: self._blob_for(parts_by[bk])
+                for bk in sorted(set(backends) | {"np"})}
         if tile:
             ranges = [range(t, min(t + tile, hi))
                       for t in range(lo, hi, tile)]
+            # explicit tiling decouples chunks from views: approximate
+            # the fleet's backend mix by cycling the per-view choices
+            chunk_backends = [backends[i % len(backends)]
+                              for i in range(len(ranges))]
         else:
-            # capability-proportional, with skew clamped to 4x: a probe
-            # that mis-measured on a throttled host must not starve the
-            # run (genuine heterogeneity up to 4x still shows through)
-            top = max(v.profile.gflops for v in views)
-            weights = [max(v.profile.gflops, 0.25 * top) for v in views]
-            ranges = self.scheduler.proportional_chunks(lo, hi, weights)
+            # chosen-backend throughput, with skew clamped to 4x: a
+            # probe that mis-measured on a throttled host must not
+            # starve the run (genuine heterogeneity up to 4x shows)
+            rates = [cost_model.backend_effective_gflops(v.profile, bk)
+                     for v, bk in zip(views, backends)]
+            top = max(rates)
+            weights = [max(r, 0.25 * top) for r in rates]
+            # drop_empty=False: ranges stay index-aligned with views so
+            # each chunk pairs with the backend priced for *its* view
+            # even when some worker's share rounds to zero
+            ranges = self.scheduler.proportional_chunks(
+                lo, hi, weights, drop_empty=False)
+            chunk_backends = list(backends)
+        ub = self.unit_backend.setdefault(
+            f"{body.__name__}@{parts_by['np'].code_hash[:8]}", {})
         chunks = []
-        for r in ranges:
+        for r, bk in zip(ranges, chunk_backends):
             if len(r) == 0:
                 continue
             tid = next(self._task_ids)
             out = self.plane.new_ref(tid)
-            spec = TaskSpec(tid, "chunk", None, (), out, blob_id=bid,
+            alt = None
+            if bk != "np":
+                alt = ("np", bids["np"], parts_by["np"])
+            spec = TaskSpec(tid, "chunk", None, (), out,
+                            blob_id=bids[bk],
                             lo=r.start, hi=r.stop,
                             written=tuple(written),
-                            sliced=slice_names, parts=parts,
-                            gather=True)
+                            sliced=slice_names, parts=parts_by[bk],
+                            gather=True, backend=bk, alt=alt,
+                            device_pref=({"np": "cpu", "jnp": "gpu"}[bk]
+                                         if hetero else ""))
             ts = _TaskState(spec)
             with self._lock:
                 self._tasks[tid] = ts
@@ -741,6 +868,7 @@ class ClusterRuntime:
             self._dispatch(ts)
             chunks.append((out, spec))
             self.chunks_dispatched += 1
+            ub[bk] = ub.get(bk, 0) + 1
         self.pfor_runs += 1
         try:
             for ref, spec in chunks:
@@ -762,16 +890,17 @@ class ClusterRuntime:
                         self._tasks.pop(tid, None)
             for ref, _ in chunks:
                 self.plane.release(ref.oid)
-            # if another caller's LRU churn evicted this blob while our
-            # chunks were in flight, a dispatch/resubmit may have
-            # resurrected it on some worker after the unblob — with no
-            # head-side record left, nothing would ever free it. Drop it
-            # again now that the run is over.
-            with self._lock:
-                rec = self._blob_cache.get(parts.blob_key)
-                evicted = rec is None or rec.bid != bid
-            if evicted:
-                self._drop_blob(bid)
+            # if another caller's LRU churn evicted a blob of this run
+            # while our chunks were in flight, a dispatch/resubmit may
+            # have resurrected it on some worker after the unblob —
+            # with no head-side record left, nothing would ever free
+            # it. Drop each used blob again now that the run is over.
+            for bk, bid in bids.items():
+                with self._lock:
+                    rec = self._blob_cache.get(parts_by[bk].blob_key)
+                    evicted = rec is None or rec.bid != bid
+                if evicted:
+                    self._drop_blob(bid)
 
     def distribute_profitable(self, flops: float, payload_bytes: int,
                               n_chunks: int,
@@ -859,6 +988,11 @@ class ClusterRuntime:
             "pfor_runs": self.pfor_runs,
             "chunks_dispatched": self.chunks_dispatched,
             "bytes_shipped": self.bytes_shipped,
+            "gpu_chunks": self.gpu_chunks,
+            "cpu_chunks": self.cpu_chunks,
+            "unit_backend": {k: dict(v)
+                             for k, v in self.unit_backend.items()},
+            "chunks_executed": dict(self.chunks_executed),
             "sliced_args": self.sliced_args,
             "bytes_saved_sliced": self.bytes_saved_sliced,
             "blob_hits": self.blob_hits,
@@ -894,10 +1028,7 @@ class ClusterRuntime:
                 wh.proc.terminate()
                 wh.proc.join(1.0)
         for wh in handles:
-            try:
-                wh.conn.close()
-            except OSError:
-                pass
+            wh.close_conn()
 
     def __enter__(self) -> "ClusterRuntime":
         return self

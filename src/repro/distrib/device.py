@@ -12,6 +12,15 @@ heterogeneous fleet the pfor sharder sizes chunks proportional to
 GPU probing is gated behind ``REPRO_DISTRIB_PROBE_GPU=1`` because a jax
 import costs seconds per worker process; the offline container is
 CPU-only anyway.
+
+For laptops/CI, ``REPRO_DISTRIB_SIM_GPU`` makes jax-CPU workers *pose*
+as GPU workers so heterogeneous routing is exercisable anywhere:
+``all``/``*`` marks every worker, a comma-separated wid list (e.g.
+``1`` or ``0,2``) marks just those. A simulated GPU reports
+``has_gpu=True``, ``gpu_kind="sim"`` and ``gpu_gflops = gflops ×
+REPRO_DISTRIB_SIM_GPU_FACTOR`` (default 4) — routing and chunk sizing
+behave exactly as with real hardware, the jnp bodies just execute on
+the jax CPU backend.
 """
 
 from __future__ import annotations
@@ -35,7 +44,8 @@ class DeviceProfile:
     gflops: float = 1.0            # measured matmul rate
     membw_gbs: float = 1.0         # measured copy bandwidth
     has_gpu: bool = False
-    gpu_kind: str = ""
+    gpu_kind: str = ""             # "cuda" / "tpu" / "sim" / ""
+    gpu_gflops: float = 0.0        # measured (or simulated) device rate
     transport_mbs: float = 0.0     # filled by the head's payload ping
 
     def as_dict(self) -> Dict[str, Any]:
@@ -55,21 +65,48 @@ def _probe_mem_bytes() -> int:
 
 
 def _probe_gpu() -> tuple:
+    """(has_gpu, kind, gpu_gflops) — measured on the real device."""
     if os.environ.get("REPRO_DISTRIB_PROBE_GPU") != "1":
-        return False, ""
+        return False, "", 0.0
     try:
         import jax
+        import jax.numpy as jnp
         devs = [d for d in jax.devices()
                 if d.platform not in ("cpu",)]
         if devs:
-            return True, devs[0].platform
+            n = 512
+            a = jnp.ones((n, n))
+            (a @ a).block_until_ready()   # compile + warm
+            best = float("inf")
+            for _ in range(3):
+                t0 = time.perf_counter()
+                (a @ a).block_until_ready()
+                best = min(best, time.perf_counter() - t0)
+            gflops = 2.0 * n ** 3 / max(1e-9, best) / 1e9
+            return True, devs[0].platform, round(gflops, 3)
     except Exception:
         pass
-    return False, ""
+    return False, "", 0.0
 
 
-def measure_profile(wid: int, n: int = 128) -> DeviceProfile:
-    """Micro-benchmark this process. ``n`` keeps the probe ~milliseconds."""
+def sim_gpu_for(wid: int) -> bool:
+    """Does ``REPRO_DISTRIB_SIM_GPU`` mark this wid as a posing GPU?"""
+    env = os.environ.get("REPRO_DISTRIB_SIM_GPU", "").strip()
+    if not env:
+        return False
+    if env in ("all", "*"):
+        return wid >= 0
+    try:
+        return wid in {int(x) for x in env.split(",") if x.strip()}
+    except ValueError:
+        return False
+
+
+def measure_profile(wid: int, n: int = 128,
+                    sim_gpu: bool = None) -> DeviceProfile:
+    """Micro-benchmark this process. ``n`` keeps the probe ~milliseconds.
+    ``sim_gpu`` forces the simulated-GPU pose (None = consult the
+    ``REPRO_DISTRIB_SIM_GPU`` env var)."""
     rng = np.random.default_rng(wid + 1)
     a = rng.normal(size=(n, n))
     b = rng.normal(size=(n, n))
@@ -93,7 +130,17 @@ def measure_profile(wid: int, n: int = 128) -> DeviceProfile:
         best = min(best, time.perf_counter() - t0)
     membw_gbs = 2.0 * buf.nbytes / max(1e-9, best) / 1e9  # read + write
 
-    has_gpu, gpu_kind = _probe_gpu()
+    has_gpu, gpu_kind, gpu_gflops = _probe_gpu()
+    if sim_gpu is None:
+        sim_gpu = sim_gpu_for(wid)
+    if sim_gpu and not has_gpu:
+        # jax-CPU posing as a GPU (laptops/CI): capability tags and the
+        # pricing table see a device ``factor``× faster than the host np
+        # rate; execution stays on the jax CPU backend
+        factor = float(os.environ.get("REPRO_DISTRIB_SIM_GPU_FACTOR",
+                                      "4"))
+        has_gpu, gpu_kind = True, "sim"
+        gpu_gflops = round(gflops * max(0.1, factor), 3)
     return DeviceProfile(
         wid=wid,
         host=socket.gethostname(),
@@ -104,4 +151,5 @@ def measure_profile(wid: int, n: int = 128) -> DeviceProfile:
         membw_gbs=round(membw_gbs, 3),
         has_gpu=has_gpu,
         gpu_kind=gpu_kind,
+        gpu_gflops=gpu_gflops,
     )

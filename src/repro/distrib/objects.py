@@ -74,6 +74,13 @@ class TaskSpec:
     device_pref: str = ""           # '' | 'cpu' | 'gpu'
     est_flops: float = 0.0
     attempts: int = 0
+    # chunk: which body variant this spec executes ("np" | "jnp"); the
+    # hetero sharder prices the choice per worker profile
+    backend: str = "np"
+    # chunk: (backend, blob_id, parts) of the np fallback body — a jnp
+    # chunk that *errors* on a worker (e.g. jax missing there) degrades
+    # to the np twin on resubmit instead of burning all its attempts
+    alt: Optional[Tuple[str, int, Any]] = None
 
 
 class ObjectPlane:

@@ -5,7 +5,10 @@ Ray deployment gets from Ray's scheduler and we compute explicitly:
 
   * **capability** — the worker's measured GFLOP/s normalized across the
     fleet, plus a bonus when the task prefers a GPU and the worker has
-    one (heterogeneous placement);
+    one, minus a penalty when the task prefers a CPU and the worker's
+    GPU would sit idle under it (heterogeneous placement: jnp-body pfor
+    chunks carry ``device_pref="gpu"``, their np twins ``"cpu"``, so a
+    mixed fleet runs each body where it prices cheapest);
   * **locality** — the fraction of the task's input bytes already
     resident in the worker's object cache (results live where they were
     produced, so chained tasks gravitate to their producers);
@@ -40,6 +43,10 @@ class PlacementWeights:
     locality: float = 2.0       # moving bytes beats moving flops
     load: float = 0.5
     gpu_bonus: float = 4.0
+    # keep np-body chunks off GPU-capable workers (whose cycles the
+    # hetero sharder already budgeted for jnp chunks); soft, so a
+    # CPU-less fleet still runs everything
+    cpu_pref_penalty: float = 2.0
 
 
 class PlacementScheduler:
@@ -53,6 +60,8 @@ class PlacementScheduler:
         s = w.capability * cap
         if task.device_pref == "gpu" and view.profile.has_gpu:
             s += w.gpu_bonus
+        elif task.device_pref == "cpu" and view.profile.has_gpu:
+            s -= w.cpu_pref_penalty
         total = sum(arg_bytes.values())
         if total > 0:
             local = sum(nb for oid, nb in arg_bytes.items()
@@ -78,10 +87,18 @@ class PlacementScheduler:
 
     @staticmethod
     def proportional_chunks(lo: int, hi: int,
-                            weights: Sequence[float]) -> List[range]:
+                            weights: Sequence[float],
+                            drop_empty: bool = True) -> List[range]:
         """Split [lo, hi) into one contiguous chunk per weight, sized
         proportional to the weights — the heterogeneous answer to equal
-        tiling (a 2× faster worker gets a 2× larger chunk)."""
+        tiling (a 2× faster worker gets a 2× larger chunk).
+
+        ``drop_empty=False`` keeps zero-length ranges so the result
+        stays index-aligned with ``weights`` — callers pairing chunks
+        with per-worker metadata (e.g. the hetero sharder's
+        backend-per-view table) need the alignment; a worker whose
+        share rounds to zero must not shift every later chunk onto the
+        wrong worker's backend."""
         n = hi - lo
         if n <= 0 or not weights:
             return []
@@ -94,6 +111,8 @@ class PlacementScheduler:
         # enforce monotone non-overlapping cuts
         for i in range(1, len(cuts)):
             cuts[i] = min(hi, max(cuts[i], cuts[i - 1]))
-        return [r for r in (range(cuts[i], cuts[i + 1])
-                            for i in range(len(cuts) - 1))
-                if len(r) > 0]
+        ranges = [range(cuts[i], cuts[i + 1])
+                  for i in range(len(cuts) - 1)]
+        if drop_empty:
+            return [r for r in ranges if len(r) > 0]
+        return ranges

@@ -102,6 +102,15 @@ def _build_globals(payload: Dict[str, Any]) -> Dict[str, Any]:
     g: Dict[str, Any] = {"__builtins__": __builtins__}
     for name, (kind, data) in payload["globals"].items():
         if kind == _MOD:
+            if data.split(".")[0] == "jax":
+                # jnp twin bodies carry float64 semantics; the head
+                # enabled x64 before generating them, so the worker must
+                # match before jax traces anything (see compiler.py)
+                try:
+                    import jax
+                    jax.config.update("jax_enable_x64", True)
+                except Exception:
+                    pass
             g[name] = importlib.import_module(data)
         elif kind == _VAL:
             g[name] = pickle.loads(data)
@@ -249,7 +258,11 @@ class ClosureParts:
     ``cell_pkls`` are the broadcast cells, individually pickled and
     hashed so a serving loop re-ships only the ones that changed;
     ``sliced`` keeps live references to the sliceable arrays — each chunk
-    task ships just its ``[lo, hi)`` rows of them."""
+    task ships just its ``[lo, hi)`` rows of them. ``backend`` tags which
+    body variant the skeleton encodes ("np" or "jnp"); backend twins of
+    the same pfor close over the same cells, so
+    :func:`split_fn_variants` builds their parts sharing one
+    content-addressed cell store (each cell pickled and hashed once)."""
 
     skeleton: bytes
     code_hash: str
@@ -257,6 +270,7 @@ class ClosureParts:
     cell_pkls: Dict[str, bytes] = field(default_factory=dict)
     cell_hashes: Dict[str, str] = field(default_factory=dict)
     sliced: Dict[str, np.ndarray] = field(default_factory=dict)
+    backend: str = "np"
 
     @property
     def blob_key(self) -> Tuple[str, str]:
@@ -267,37 +281,62 @@ class ClosureParts:
             len(b) for b in self.cell_pkls.values())
 
 
-def split_fn(fn, sliceable: Sequence[str] = ()) -> ClosureParts:
+def split_fn(fn, sliceable: Sequence[str] = (),
+             backend: str = "np",
+             _cell_memo: Dict[int, Tuple[bytes, str]] = None
+             ) -> ClosureParts:
     """Decompose a closure into skeleton + per-cell payloads.
 
     Cells named in ``sliceable`` that hold ndarrays stay live (shipped
     per chunk as row slices); every other cell is pickled and
-    content-hashed for the changed-cells-only re-ship protocol."""
+    content-hashed for the changed-cells-only re-ship protocol.
+    ``_cell_memo`` (id(value) → (pickle, hash)) lets backend twins of
+    one body share the pickling work — see :func:`split_fn_variants`."""
     skeleton, code_hash = _skeleton_for(fn)
     sliceable = set(sliceable)
+    memo = _cell_memo if _cell_memo is not None else {}
     sig_parts: List[str] = []
     cell_pkls: Dict[str, bytes] = {}
     cell_hashes: Dict[str, str] = {}
     sliced: Dict[str, np.ndarray] = {}
+
+    def pickled(val) -> Tuple[bytes, str]:
+        hit = memo.get(id(val))
+        if hit is None:
+            pkl = pickle.dumps(val, protocol=_PICKLE_PROTO)
+            hit = (pkl, _hash(pkl))
+            memo[id(val)] = hit
+        return hit
+
     for name, val in closure_arrays(fn).items():
         if (name in sliceable and isinstance(val, np.ndarray)
                 and val.ndim >= 1):
             sliced[name] = val
             sig_parts.append(f"{name}:S{val.shape}:{val.dtype}")
         elif isinstance(val, np.ndarray):
-            pkl = pickle.dumps(val, protocol=_PICKLE_PROTO)
-            cell_pkls[name] = pkl
-            cell_hashes[name] = _hash(pkl)
+            cell_pkls[name], cell_hashes[name] = pickled(val)
             sig_parts.append(f"{name}:B{val.shape}:{val.dtype}")
         else:
-            pkl = pickle.dumps(val, protocol=_PICKLE_PROTO)
-            cell_pkls[name] = pkl
-            cell_hashes[name] = _hash(pkl)
+            cell_pkls[name], cell_hashes[name] = pickled(val)
             sig_parts.append(f"{name}:v{type(val).__name__}")
     return ClosureParts(skeleton=skeleton, code_hash=code_hash,
                         struct_sig=";".join(sig_parts),
                         cell_pkls=cell_pkls, cell_hashes=cell_hashes,
-                        sliced=sliced)
+                        sliced=sliced, backend=backend)
+
+
+def split_fn_variants(bodies: Dict[str, Any],
+                      sliceable: Sequence[str] = ()
+                      ) -> Dict[str, ClosureParts]:
+    """Backend → ClosureParts for the variant bodies of one pfor.
+
+    Twin bodies are closures over the *same* enclosing scope, so their
+    cells hold identical objects — each value is pickled and hashed once
+    and the resulting content-addressed entries are shared across the
+    per-backend parts (persistent-blob reuse survives backend tagging)."""
+    memo: Dict[int, Tuple[bytes, str]] = {}
+    return {bk: split_fn(fn, sliceable, backend=bk, _cell_memo=memo)
+            for bk, fn in bodies.items()}
 
 
 def assemble_fn(skeleton: bytes, cell_values: Dict[str, Any]):

@@ -17,7 +17,8 @@ the same framing a TCP transport would use):
                  | ("blob", bid, skeleton_or_None, {cell: value})
                  | ("unblob", bid) | ("get", oid) | ("free", oid)
                  | ("ping", payload) | ("profile",) | ("shutdown",)
-  worker → head: ("hello", profile) | ("done", tid, oid, nbytes, payload)
+  worker → head: ("hello", profile)
+                 | ("done", tid, oid, nbytes, payload, ran_backend)
                  | ("err", tid, message, traceback)
                  | ("obj", oid, payload) | ("pong", nbytes)
 
@@ -86,8 +87,9 @@ def _chunk_updates(body, lo: int, hi: int,
 
 
 class WorkerState:
-    def __init__(self, wid: int):
+    def __init__(self, wid: int, sim_gpu: bool = False):
         self.wid = wid
+        self.sim_gpu = sim_gpu    # pose as a GPU worker (hetero CI/demo)
         self.objects: Dict[int, Any] = {}     # local object-plane shard
         self.blob_skel: Dict[int, bytes] = {}
         self.blob_cells: Dict[int, Dict[str, Any]] = {}
@@ -163,11 +165,17 @@ class WorkerState:
         return fn(*args)
 
 
-def worker_main(conn, wid: int) -> None:
-    """Entry point of the spawned worker process."""
-    state = WorkerState(wid)
+def worker_main(conn, wid: int, sim_gpu: bool = False) -> None:
+    """Entry point of the spawned worker process. ``sim_gpu`` makes the
+    profile pose as a GPU worker (jax-CPU execution) so heterogeneous
+    routing is exercisable on GPU-less hosts; the env var
+    ``REPRO_DISTRIB_SIM_GPU`` (see :mod:`.device`) does the same by
+    wid."""
+    state = WorkerState(wid, sim_gpu=sim_gpu)
     try:
-        conn.send(("hello", measure_profile(wid).as_dict()))
+        conn.send(("hello",
+                   measure_profile(wid, sim_gpu=sim_gpu or None)
+                   .as_dict()))
     except (EOFError, OSError, BrokenPipeError):
         return
     while True:
@@ -187,11 +195,18 @@ def worker_main(conn, wid: int) -> None:
                     continue
                 oid = spec["out_oid"]
                 nbytes = int(getattr(result, "nbytes", 0) or 0)
+                # chunk dones echo which body backend actually *ran* —
+                # the head's executed-chunk telemetry must not trust
+                # dispatch intent (a jnp chunk may have been downgraded
+                # and re-run as np)
+                ran = (spec.get("backend", "np")
+                       if spec["kind"] == "chunk" else None)
                 if spec.get("gather") or nbytes <= INLINE_MAX:
-                    conn.send(("done", tid, oid, nbytes, ("v", result)))
+                    conn.send(("done", tid, oid, nbytes, ("v", result),
+                               ran))
                 else:
                     state.objects[oid] = result
-                    conn.send(("done", tid, oid, nbytes, None))
+                    conn.send(("done", tid, oid, nbytes, None, ran))
             elif kind == "blob":
                 _, bid, skeleton, delta = msg
                 state.update_blob(bid, skeleton, delta)
@@ -211,7 +226,10 @@ def worker_main(conn, wid: int) -> None:
             elif kind == "profile":
                 # re-measure on request: the head serializes these so
                 # fleet micro-benchmarks never contend with each other
-                conn.send(("hello", measure_profile(state.wid).as_dict()))
+                conn.send(("hello",
+                           measure_profile(state.wid,
+                                           sim_gpu=state.sim_gpu or None)
+                           .as_dict()))
             elif kind == "shutdown":
                 break
         except (EOFError, OSError, BrokenPipeError):

@@ -1,0 +1,461 @@
+"""Heterogeneous CPU/GPU chunk routing (per-unit backend variants).
+
+Covers the whole seam: codegen's backend-tagged twin bodies, the
+(unit, backend, worker-profile) pricing table in core.cost, simulated-GPU
+device profiles, placement routing by ``device_pref``, the mixed-fleet
+equivalence grid (np-only / jnp-only / mixed clusters on one compiled
+pfor), and the recv/send close-race regression (the tracked
+``'NoneType' cannot be interpreted as an integer`` flaky).
+"""
+
+import multiprocessing as mp
+import threading
+import time
+
+import numpy as np
+import pytest
+
+# imported at module scope so ClusterRuntime worker forks inherit the
+# already-loaded jax (a cold per-worker import costs seconds)
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import cost
+from repro.core.compiler import compile_kernel
+from repro.distrib import ClusterRuntime, DeviceProfile
+from repro.distrib.cluster import _WorkerHandle
+from repro.distrib.device import measure_profile, sim_gpu_for
+from repro.distrib.objects import TaskSpec, ClusterRef
+from repro.distrib.placement import (PlacementScheduler, PlacementWeights,
+                                     WorkerView)
+
+
+@pytest.fixture(autouse=True)
+def _no_ambient_sim_gpu(monkeypatch):
+    """Fleet composition in these tests is kwarg-driven; an ambient
+    ``REPRO_DISTRIB_SIM_GPU`` (e.g. the CI hetero step) must not leak
+    into the np-only cases through worker-process environments."""
+    monkeypatch.delenv("REPRO_DISTRIB_SIM_GPU", raising=False)
+
+
+def hetero_kernel(x: "ndarray[f64,2]", y: "ndarray[f64,2]",
+                  outY: "ndarray[f64,1]", n: int, m: int, iters: int):
+    for i in range(0, n):
+        w = 0.5 * y[i, 0:m]
+        for t in range(0, iters):
+            w = w + 0.1 * (x[i, 0:m] - w)
+        outY[i] = np.dot(w[0:m], y[i, 0:m])
+
+
+def _make_data(n=12, m=6, seed=3):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n, m)), rng.normal(size=(n, m)), np.zeros(n)
+
+
+def _reference(x, y, n, m, iters):
+    out = np.zeros(n)
+    hetero_kernel(x, y, out, n, m, iters)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# codegen: per-unit backend twins
+# ---------------------------------------------------------------------------
+
+def test_codegen_emits_backend_tagged_twins():
+    ck = compile_kernel(hetero_kernel)
+    src = ck.source("np")
+    assert "__pfor_body_0.__backend__ = 'np'" in src
+    assert "def __pfor_body_0__jnp(" in src
+    assert "__pfor_body_0__jnp.__backend__ = 'jnp'" in src
+    assert "__pfor_body_0.__jnp__ = __pfor_body_0__jnp" in src
+    # twin computes through __jxp, np body through xp
+    assert "__jxp.dot(" in src and "xp.dot(" in src
+    # both bodies carry the same sliceability stamp
+    assert src.count(".__sliceable__ = ('x', 'y', 'outY')") == 2 or \
+        src.count(".__sliceable__ =") == 2
+    assert ck.pfor_jnp_units() == [0]
+    assert ck.stats()["pfor_jnp_units"] == 1
+
+
+def test_jnp_twin_matches_np_body_inprocess():
+    """Run the captured twin directly over the full range — bitwise-close
+    equivalence without any processes."""
+    got_bodies = {}
+
+    class FakeRT:
+        def pfor_shards(self, body, lo, hi, tile, written=(),
+                        sliceable=(), est_flops=0.0):
+            got_bodies["np"] = body
+            got_bodies["jnp"] = body.__jnp__
+            got_bodies["est_flops"] = est_flops
+            body.__jnp__(lo, hi)
+
+        def distribute_profitable(self, *a, **k):
+            return True
+
+    ck = compile_kernel(hetero_kernel, runtime=FakeRT())
+    ck.pfor_config.distribute_threshold = 0
+    x, y, out = _make_data()
+    ref = _reference(x, y, 12, 6, 5)
+    ck.call_variant("np", x, y, out, 12, 6, 5)
+    assert np.allclose(out, ref, atol=1e-8)
+    assert got_bodies["np"].__backend__ == "np"
+    assert got_bodies["jnp"].__backend__ == "jnp"
+    # the dispatcher's FLOP estimate reached the sharder
+    assert got_bodies["est_flops"] > 0
+
+
+def numpy_local_kernel(A: "ndarray[f64,2]", out: "ndarray[f64,1]",
+                       n: int, m: int):
+    for i in range(0, n):
+        t = 1.0 * A[i, 0:m]          # pure-numpy local (no jnp op)
+        t[0:m] = t[0:m] * 2.0        # partial store → .at[] in the twin
+        out[i] = np.dot(t[0:m], A[i, 0:m])
+
+
+def test_twin_converts_numpy_locals_before_at_stores():
+    """A body local defined by pure numpy arithmetic over captured
+    arrays must still be a jnp value in the twin — otherwise the .at[]
+    partial store crashes every jnp-routed chunk (review finding)."""
+    ck = compile_kernel(numpy_local_kernel)
+    src = ck.source("np")
+    assert "__pfor_body_0__jnp" in src
+    body = {}
+
+    class FakeRT:
+        def pfor_shards(self, b, lo, hi, tile, **kw):
+            body["jnp"] = b.__jnp__
+            b.__jnp__(lo, hi)
+
+        def distribute_profitable(self, *a, **k):
+            return True
+
+    ck.pfor_config.runtime = FakeRT()
+    ck.pfor_config.distribute_threshold = 0
+    rng = np.random.default_rng(0)
+    A = rng.normal(size=(7, 4))
+    ref = np.zeros(7)
+    numpy_local_kernel(A, ref, 7, 4)
+    out = np.zeros(7)
+    ck.call_variant("np", A, out, 7, 4)
+    assert np.allclose(out, ref, atol=1e-8)
+
+
+def test_proportional_chunks_keep_alignment_with_weights():
+    """A worker whose share rounds to zero must not shift later chunks
+    onto another view's backend (review finding): drop_empty=False
+    returns one range per weight, empties included."""
+    ranges = PlacementScheduler.proportional_chunks(
+        0, 2, [1.0, 100.0, 1.0], drop_empty=False)
+    assert len(ranges) == 3
+    assert [len(r) for r in ranges].count(0) >= 1
+    assert sum(len(r) for r in ranges) == 2
+    # the big-weight view keeps its own (middle) slot
+    assert len(ranges[1]) == 2
+    # default behavior unchanged for existing callers
+    assert all(len(r) > 0 for r in PlacementScheduler.proportional_chunks(
+        0, 2, [1.0, 100.0, 1.0]))
+
+
+def test_twin_skipped_for_opaque_bodies():
+    """A pfor whose body contains a black-box statement keeps an np-only
+    body (no twin, no __jnp__)."""
+
+    def opaque_body(outY: "ndarray[f64,1]", n: int):
+        for i in range(0, n):
+            outY[i] = float(np.random.default_rng(i).normal())
+
+    ck = compile_kernel(opaque_body)
+    src = ck.source("np")
+    if "__pfor_body_0" in src:       # parallel or not, never a twin
+        assert "__jnp__" not in src
+    assert ck.pfor_jnp_units() == []
+
+
+# ---------------------------------------------------------------------------
+# cost: the (unit, backend, worker-profile) pricing table
+# ---------------------------------------------------------------------------
+
+def _prof(gflops=50.0, gpu=False, gpu_gflops=0.0, kind=""):
+    return DeviceProfile(wid=0, gflops=gflops, membw_gbs=10.0,
+                         has_gpu=gpu, gpu_gflops=gpu_gflops,
+                         gpu_kind=kind)
+
+
+def test_pick_chunk_backend_prices_cells():
+    cpu = _prof()
+    sim = _prof(gpu=True, gpu_gflops=200.0, kind="sim")
+    real = _prof(gpu=True, gpu_gflops=2000.0, kind="cuda")
+    # CPU-only worker never runs the twin
+    assert cost.pick_chunk_backend(1e9, 1e6, cpu) == "np"
+    # no twin available: np regardless of hardware
+    assert cost.pick_chunk_backend(1e9, 1e6, real, allow_jnp=False) == "np"
+    # simulated GPU prices without staging overhead → jnp even when tiny
+    assert cost.pick_chunk_backend(1e4, 1e3, sim) == "jnp"
+    # real GPU: launch overhead buries a tiny chunk …
+    assert cost.pick_chunk_backend(1e4, 1e3, real) == "np"
+    # … but a big chunk amortizes it
+    assert cost.pick_chunk_backend(5e9, 1e6, real) == "jnp"
+    # zero FLOP estimate degrades to capability tags
+    assert cost.pick_chunk_backend(0.0, 0.0, real) == "jnp"
+
+
+def test_unit_backend_table_and_effective_rates():
+    cpu, sim = _prof(gflops=40.0), _prof(gflops=40.0, gpu=True,
+                                         gpu_gflops=160.0, kind="sim")
+    table = cost.unit_backend_table(1e8, 1e6, [cpu, sim])
+    assert table == ["np", "jnp"]
+    assert cost.backend_effective_gflops(cpu, "np") == 40.0
+    assert cost.backend_effective_gflops(sim, "jnp") == 160.0
+
+
+# ---------------------------------------------------------------------------
+# device: simulated-GPU profiles
+# ---------------------------------------------------------------------------
+
+def test_sim_gpu_env_parsing(monkeypatch):
+    monkeypatch.delenv("REPRO_DISTRIB_SIM_GPU", raising=False)
+    assert not sim_gpu_for(0)
+    monkeypatch.setenv("REPRO_DISTRIB_SIM_GPU", "all")
+    assert sim_gpu_for(0) and sim_gpu_for(7)
+    assert not sim_gpu_for(-1)          # the head never poses
+    monkeypatch.setenv("REPRO_DISTRIB_SIM_GPU", "1")
+    assert sim_gpu_for(1) and not sim_gpu_for(0)
+    monkeypatch.setenv("REPRO_DISTRIB_SIM_GPU", "0,2")
+    assert sim_gpu_for(0) and sim_gpu_for(2) and not sim_gpu_for(1)
+    monkeypatch.setenv("REPRO_DISTRIB_SIM_GPU", "bogus")
+    assert not sim_gpu_for(0)
+
+
+def test_measure_profile_sim_pose(monkeypatch):
+    monkeypatch.setenv("REPRO_DISTRIB_SIM_GPU_FACTOR", "3")
+    p = measure_profile(2, sim_gpu=True)
+    assert p.has_gpu and p.gpu_kind == "sim"
+    assert p.gpu_gflops == pytest.approx(3 * p.gflops, rel=0.01)
+    q = measure_profile(2, sim_gpu=False)
+    assert not q.has_gpu and q.gpu_gflops == 0.0
+    # profile survives the wire dict roundtrip with the new field
+    r = DeviceProfile.from_dict(p.as_dict())
+    assert r.gpu_gflops == p.gpu_gflops
+
+
+# ---------------------------------------------------------------------------
+# placement: device_pref routing
+# ---------------------------------------------------------------------------
+
+def _chunk_spec(pref):
+    return TaskSpec(1, "chunk", None, (), ClusterRef(1), device_pref=pref)
+
+
+def test_placement_routes_jnp_chunks_to_gpu_worker():
+    sched = PlacementScheduler(PlacementWeights())
+    views = [WorkerView(0, _prof(gflops=80.0)),
+             WorkerView(1, _prof(gflops=40.0, gpu=True,
+                                 gpu_gflops=160.0, kind="sim"))]
+    assert sched.place(_chunk_spec("gpu"), views) == 1
+    # np chunks steer away from the GPU worker even though it is loaded
+    # lighter — its cycles are budgeted for the jnp chunks
+    views[0].outstanding = 1
+    assert sched.place(_chunk_spec("cpu"), views) == 0
+    # no preference: capability wins as before
+    views[0].outstanding = 0
+    assert sched.place(_chunk_spec(""), views) == 0
+
+
+# ---------------------------------------------------------------------------
+# mixed-fleet equivalence grid (real worker processes)
+# ---------------------------------------------------------------------------
+
+N, M, ITERS = 14, 6, 5
+
+
+@pytest.mark.parametrize("sim_gpus,expect", [
+    ((), "np_only"),
+    ((0, 1), "jnp_only"),
+    ((1,), "mixed"),
+])
+def test_equivalence_grid_across_fleets(sim_gpus, expect):
+    """The same compiled pfor on np-only, jnp-only and mixed clusters:
+    identical results (atol 1e-8) and routing telemetry showing the
+    expected backend mix actually executed chunks."""
+    x, y, _ = _make_data(N, M)
+    ref = _reference(x, y, N, M, ITERS)
+    ck = compile_kernel(hetero_kernel)   # compile once, bind per fleet
+    rt = ClusterRuntime(workers=2, sim_gpu_workers=sim_gpus)
+    try:
+        ck.pfor_config.runtime = rt
+        ck.pfor_config.workers = 2
+        ck.pfor_config.distribute_threshold = 0
+        for _ in range(2):               # second call exercises blob reuse
+            out = np.zeros(N)
+            ck.call_variant("np", x, y, out, N, M, ITERS)
+            assert np.allclose(out, ref, atol=1e-8)
+        st = rt.stats()
+        assert st["chunks_dispatched"] >= 4
+        ran = st["chunks_executed"]     # confirmed by worker dones
+        if expect == "np_only":
+            assert st["gpu_chunks"] == 0 and st["cpu_chunks"] > 0
+            assert set(ran) == {"np"}
+        elif expect == "jnp_only":
+            assert st["cpu_chunks"] == 0 and st["gpu_chunks"] > 0
+            assert set(ran) == {"jnp"}
+        else:
+            assert st["gpu_chunks"] > 0 and st["cpu_chunks"] > 0
+            assert ran.get("np", 0) > 0 and ran.get("jnp", 0) > 0
+            (mix,) = st["unit_backend"].values()
+            assert set(mix) == {"np", "jnp"}
+        assert st["blob_hits"] > 0       # serving-loop reuse survives
+    finally:
+        rt.shutdown()
+        ck.pfor_config.runtime = None
+
+
+def test_env_pose_survives_respawn(monkeypatch):
+    """A worker posing via REPRO_DISTRIB_SIM_GPU must keep the pose
+    when respawned — the replacement's fresh wid no longer matches the
+    env wid list, so the pose is resolved at spawn time and inherited
+    (review finding)."""
+    monkeypatch.setenv("REPRO_DISTRIB_SIM_GPU", "1")
+    rt = ClusterRuntime(workers=2)
+    try:
+        assert [p.wid for p in rt.profiles() if p.has_gpu] == [1]
+        assert rt.kill_worker(wid=1) is not None
+        deadline = time.time() + 30.0
+        while time.time() < deadline and rt.worker_deaths < 1:
+            time.sleep(0.05)      # death not noticed yet
+        while time.time() < deadline:
+            profs = rt.profiles()
+            if any(p.has_gpu and p.wid != 1 for p in profs):
+                break
+            time.sleep(0.05)
+        profs = rt.profiles()
+        assert any(p.has_gpu and p.wid != 1 for p in profs), \
+            [(p.wid, p.has_gpu) for p in profs]
+    finally:
+        rt.shutdown()
+
+
+def test_mixed_fleet_survives_worker_kill():
+    """SIGKILL the GPU-posing worker mid-serving-loop: the respawn
+    inherits the pose, chunks resubmit, results stay exact."""
+    x, y, _ = _make_data(N, M)
+    ref = _reference(x, y, N, M, ITERS)
+    ck = compile_kernel(hetero_kernel)
+    rt = ClusterRuntime(workers=2, sim_gpu_workers=(1,))
+    try:
+        ck.pfor_config.runtime = rt
+        ck.pfor_config.workers = 2
+        ck.pfor_config.distribute_threshold = 0
+        for call in range(6):
+            if call == 2:
+                assert rt.kill_worker(wid=1) is not None
+            out = np.zeros(N)
+            ck.call_variant("np", x, y, out, N, M, ITERS)
+            assert np.allclose(out, ref, atol=1e-8), f"call {call}"
+        assert rt.worker_deaths == 1
+        # the pose survived the respawn: jnp chunks kept flowing
+        profs = rt.profiles()
+        assert any(p.has_gpu for p in profs)
+        assert rt.stats()["chunks_executed"].get("jnp", 0) > 0
+    finally:
+        rt.shutdown()
+        ck.pfor_config.runtime = None
+
+
+# ---------------------------------------------------------------------------
+# tracked flaky: recv/send racing a connection close
+# ---------------------------------------------------------------------------
+
+def test_handle_send_translates_closed_handle_typeerror():
+    """mp.Connection.close() nulls its OS handle without a lock; a send
+    racing it historically surfaced as ``TypeError: 'NoneType' object
+    cannot be interpreted as an integer`` from a cluster-recv thread.
+    The handle wrapper must turn that into the OSError every caller
+    already handles."""
+
+    class _RacyConn:
+        def send(self, msg):
+            raise TypeError(
+                "'NoneType' object cannot be interpreted as an integer")
+
+        def close(self):
+            pass
+
+    wh = _WorkerHandle(0, None, _RacyConn())
+    with pytest.raises(OSError):
+        wh.send(("ping", b""))
+
+
+def test_handle_close_serializes_behind_sends():
+    """Hammer send() from one thread while close_conn() lands from
+    another: every failure must be OSError, never TypeError."""
+    a, b = mp.Pipe()
+    wh = _WorkerHandle(0, None, a)
+    errors = []
+    stop = threading.Event()
+
+    def drain():       # keep the pipe from backpressure-blocking send()
+        while not stop.is_set():
+            try:
+                if b.poll(0.01):
+                    b.recv()
+            except (EOFError, OSError):
+                return
+
+    def sender():
+        for _ in range(2000):
+            try:
+                wh.send(("ping", b"x" * 4096))
+            except OSError:
+                return
+            except BaseException as exc:  # noqa: BLE001
+                errors.append(exc)
+                return
+
+    dr = threading.Thread(target=drain, daemon=True)
+    dr.start()
+    t = threading.Thread(target=sender)
+    t.start()
+    time.sleep(0.005)
+    wh.close_conn()
+    t.join(10.0)
+    alive = t.is_alive()
+    stop.set()
+    b.close()
+    assert not alive, "sender wedged behind close_conn"
+    assert not errors, errors
+
+
+def test_worker_sigkill_mid_handshake_no_unraisable():
+    """SIGKILL workers right after (re)spawn — while the head is still
+    mid-handshake (hello / reprofile / transport ping) — and assert no
+    thread dies with an unhandled exception (the tracked flaky's
+    signature) and the fleet still computes correctly afterwards."""
+    seen = []
+    prev_hook = threading.excepthook
+    threading.excepthook = lambda args: seen.append(args)
+    rt = ClusterRuntime(workers=2)
+    try:
+        for _ in range(4):
+            rt.kill_worker()          # respawn starts a fresh handshake
+            time.sleep(0.05)          # land the next kill inside it
+        # wait for *profiled* workers (hello completed), not merely
+        # alive handles — pfor placement only sees profiled views
+        deadline = time.time() + 30.0
+        while len(rt.profiles()) < 2 and time.time() < deadline:
+            time.sleep(0.05)
+        x, y, _ = _make_data(N, M)
+        ref = _reference(x, y, N, M, ITERS)
+        ck = compile_kernel(hetero_kernel, runtime=rt)
+        ck.pfor_config.distribute_threshold = 0
+        out = np.zeros(N)
+        ck.call_variant("np", x, y, out, N, M, ITERS)
+        assert np.allclose(out, ref, atol=1e-8)
+    finally:
+        rt.shutdown()
+        threading.excepthook = prev_hook
+    fatal = [s for s in seen if s.exc_type is not None]
+    assert not fatal, [f"{s.exc_type.__name__}: {s.exc_value}"
+                       for s in fatal]
