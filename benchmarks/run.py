@@ -63,7 +63,7 @@ def bench_kernels():
 
 
 def main() -> None:
-    t0 = time.time()
+    t0 = time.perf_counter()
     _section("polybench (paper Table 4 / Fig 8)")
     from . import polybench
 
@@ -88,7 +88,7 @@ def main() -> None:
 
     dryrun_table.main()
 
-    print(f"\nbenchmarks.total_s,{time.time() - t0:.1f}")
+    print(f"\nbenchmarks.total_s,{time.perf_counter() - t0:.1f}")
 
 
 if __name__ == "__main__":

@@ -128,11 +128,41 @@ def run(csv: bool = True) -> List[Dict]:
     return rows
 
 
-def run_distrib(smoke: bool = False, out_path: str = "BENCH_distrib.json"
-                ) -> List[Dict]:
+def _phase_delta(before: Dict[str, float],
+                 after: Dict[str, float]) -> Dict[str, float]:
+    """Per-phase seconds attributable to one timed call (the cluster's
+    phase counters are cumulative)."""
+    return {k: after.get(k, 0.0) - before.get(k, 0.0) for k in after}
+
+
+def _trace_diagnosis(delta: Dict[str, float], wall_s: float,
+                     workers: int) -> str:
+    """One-line, trace-derived explanation of where a cluster round's
+    wall time went — the 'why is this row slow' statement."""
+    round_s = delta.get("round_s", 0.0) or wall_s
+    head = {k[:-2]: v for k, v in delta.items()
+            if k in ("plan_s", "split_s", "dispatch_s", "gather_s",
+                     "merge_s")}
+    parts = dict(head)
+    if "compute_s" in delta:
+        # worker compute is summed across workers: normalize to the
+        # head's wall by dividing by the worker count
+        parts["compute"] = delta["compute_s"] / max(1, workers)
+    name, secs = max(parts.items(), key=lambda kv: kv[1])
+    pct = 100.0 * secs / round_s if round_s > 0 else 0.0
+    where = "on head" if name in head else f"across {workers} workers"
+    return (f"{name} {where} = {pct:.0f}% of round wall "
+            f"({secs * 1e3:.1f}ms of {round_s * 1e3:.1f}ms)")
+
+
+def run_distrib(smoke: bool = False, out_path: str = "BENCH_distrib.json",
+                trace_path: str = "TRACE_distrib.json") -> List[Dict]:
     """Adaptive STAP (examples/stap.py) on the multi-process cluster
     runtime: sequential vs 1-process vs N-process, measured — no
-    simulated dimension. Writes ``BENCH_distrib.json``."""
+    simulated dimension. Writes ``BENCH_distrib.json`` and (for the
+    widest cluster run, which is traced) the Perfetto timeline
+    ``TRACE_distrib.json`` — feed it to ``python -m
+    repro.obs.summarize`` for the per-phase breakdown."""
     import json
     import os
     import sys
@@ -140,6 +170,7 @@ def run_distrib(smoke: bool = False, out_path: str = "BENCH_distrib.json"
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     from examples.stap import (ALPHA, ITERS, LOADING, make_stap_data,
                                stap_adaptive, stap_seq)
+    from repro import obs
     from repro.core.compiler import compile_kernel
     from repro.distrib import ClusterRuntime
 
@@ -164,8 +195,17 @@ def run_distrib(smoke: bool = False, out_path: str = "BENCH_distrib.json"
                  "gates_per_s": round(gates / t_seq, 2),
                  "speedup_vs_seq": 1.0, "measured": True})
 
-    for workers in ((1, 2) if smoke else (1, 2, 4)):
-        rt = ClusterRuntime(workers=workers)
+    fleet = (1, 2) if smoke else (1, 2, 4)
+    for workers in fleet:
+        # every cluster run is traced (compute/idle need worker spans);
+        # the widest run gets a fresh recorder and exports the Perfetto
+        # timeline at shutdown, so the artifact is one clean fleet run
+        last = workers == fleet[-1]
+        if last:
+            obs.enable()
+            obs.recorder().clear()
+        rt = ClusterRuntime(workers=workers,
+                            trace=trace_path if last else True)
         try:
             ck = compile_kernel(stap_adaptive, runtime=rt,
                                 workers=workers)
@@ -174,12 +214,17 @@ def run_distrib(smoke: bool = False, out_path: str = "BENCH_distrib.json"
             ck.call_variant("np", snap, train, steer, out_a, gates, k,
                             dof, iters, ALPHA, LOADING)  # warm workers
             t_n = float("inf")
+            phases: Dict[str, float] = {}
             for _ in range(reps):
                 out_a = out.copy()
+                ph0 = rt.phase_breakdown()
                 t0 = time.perf_counter()
                 ck.call_variant("np", snap, train, steer, out_a, gates,
                                 k, dof, iters, ALPHA, LOADING)
-                t_n = min(t_n, time.perf_counter() - t0)
+                t_rep = time.perf_counter() - t0
+                if t_rep < t_n:
+                    t_n = t_rep
+                    phases = _phase_delta(ph0, rt.phase_breakdown())
             err = float(abs(out_a - out_ref).max())
             assert err < 1e-8, f"distributed STAP mismatch: {err:.2e}"
             st = rt.stats()
@@ -205,6 +250,13 @@ def run_distrib(smoke: bool = False, out_path: str = "BENCH_distrib.json"
                 "cells_shipped": st["cells_shipped"],
                 "cells_skipped": st["cells_skipped"],
                 "profiles_gflops": [p.gflops for p in rt.profiles()],
+                # trace-plane phase breakdown for the best rep
+                "ship_s": round(phases.get("ship_s", 0.0), 5),
+                "gather_s": round(phases.get("gather_s", 0.0), 5),
+                "compute_s": round(phases.get("compute_s", 0.0), 5),
+                "idle_s": round(phases.get("idle_s", 0.0), 5),
+                "phases": {k: round(v, 5) for k, v in phases.items()},
+                "diagnosis": _trace_diagnosis(phases, t_n, workers),
             })
         finally:
             rt.shutdown()
@@ -224,7 +276,11 @@ def run_distrib(smoke: bool = False, out_path: str = "BENCH_distrib.json"
         print(f"stap_distrib.{r['variant']},workers={r['workers']},"
               f"{r['gates_per_s']}_gates_per_s,"
               f"x{r['speedup_vs_seq']}{extra}", flush=True)
+        if r.get("diagnosis"):
+            print(f"stap_distrib.diagnosis,workers={r['workers']},"
+                  f"{r['diagnosis']}", flush=True)
     print(f"stap_distrib.written,{out_path}")
+    print(f"stap_distrib.trace_written,{trace_path}")
     return rows
 
 
@@ -247,6 +303,7 @@ def run_hetero(smoke: bool = False, out_path: str = "BENCH_distrib.json"
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     from examples.stap import (ALPHA, LOADING, make_stap_data,
                                stap_adaptive, stap_seq)
+    from repro import obs
     from repro.core.compiler import compile_kernel
     from repro.distrib import ClusterRuntime
 
@@ -266,20 +323,30 @@ def run_hetero(smoke: bool = False, out_path: str = "BENCH_distrib.json"
         t_seq = min(t_seq, time.perf_counter() - t0)
 
     rows: List[Dict] = []
-    rt = ClusterRuntime(workers=2, sim_gpu_workers=(1,))
+    # traced: the hetero row's historically terrible speedup needs the
+    # span timeline to say *why*, not just that it is slow
+    rt = ClusterRuntime(workers=2, sim_gpu_workers=(1,), trace=True)
     try:
+        comp = obs.metrics.scope("compile.stap_adaptive")
+        c0 = sum(comp.snapshot().values())
         ck = compile_kernel(stap_adaptive, runtime=rt, workers=2)
+        compile_s = sum(comp.snapshot().values()) - c0
         ck.pfor_config.distribute_threshold = 0
         out_a = out.copy()
         ck.call_variant("np", snap, train, steer, out_a, gates, k, dof,
                         iters, ALPHA, LOADING)   # warm (ships blobs)
         t_h = float("inf")
+        phases: Dict[str, float] = {}
         for _ in range(reps):
             out_a = out.copy()
+            ph0 = rt.phase_breakdown()
             t0 = time.perf_counter()
             ck.call_variant("np", snap, train, steer, out_a, gates, k,
                             dof, iters, ALPHA, LOADING)
-            t_h = min(t_h, time.perf_counter() - t0)
+            t_rep = time.perf_counter() - t0
+            if t_rep < t_h:
+                t_h = t_rep
+                phases = _phase_delta(ph0, rt.phase_breakdown())
         err = float(abs(out_a - out_ref).max())
         assert err < 1e-8, f"hetero STAP mismatch: {err:.2e}"
         st = rt.stats()
@@ -309,6 +376,13 @@ def run_hetero(smoke: bool = False, out_path: str = "BENCH_distrib.json"
             "profiles": [{"gflops": p.gflops, "has_gpu": p.has_gpu,
                           "gpu_gflops": p.gpu_gflops,
                           "gpu_kind": p.gpu_kind} for p in profs],
+            "compile_s": round(compile_s, 5),
+            "ship_s": round(phases.get("ship_s", 0.0), 5),
+            "gather_s": round(phases.get("gather_s", 0.0), 5),
+            "compute_s": round(phases.get("compute_s", 0.0), 5),
+            "idle_s": round(phases.get("idle_s", 0.0), 5),
+            "phases": {k: round(v, 5) for k, v in phases.items()},
+            "diagnosis": _trace_diagnosis(phases, t_h, 2),
         })
     finally:
         rt.shutdown()
@@ -339,6 +413,9 @@ def run_hetero(smoke: bool = False, out_path: str = "BENCH_distrib.json"
         print(f"stap_hetero.{r['variant']},workers={r['workers']},"
               f"{r['gates_per_s']}_gates_per_s,"
               f"x{r['speedup_vs_seq']}{extra}", flush=True)
+        if r.get("diagnosis"):
+            print(f"stap_hetero.diagnosis,x{r['speedup_vs_seq']},"
+                  f"{r['diagnosis']}", flush=True)
     print(f"stap_hetero.written,{out_path}")
     return rows
 

@@ -604,12 +604,16 @@ class Emitter:
         sliceable = tuple(getattr(u, "sliceable", ()) or ())
         self.w(f"{body_name}.__sliceable__ = {sliceable!r}")
         self.w(f"{body_name}.__backend__ = 'np'")
+        # unit label: lets obs spans / trace rows name which pfor unit
+        # of the kernel a chunk belongs to
+        self.w(f"{body_name}.__unit__ = {idx}")
         if self.pfor_jnp and getattr(u, "jnp_feasible", True):
             jnp_name = self._try_emit_jnp_twin(u, body_name, idx,
                                                pending_before)
             if jnp_name is not None:
                 self.w(f"{jnp_name}.__sliceable__ = {sliceable!r}")
                 self.w(f"{jnp_name}.__backend__ = 'jnp'")
+                self.w(f"{jnp_name}.__unit__ = {idx}")
                 self.w(f"{body_name}.__jnp__ = {jnp_name}")
                 self.meta.pfor_jnp_units.append(idx)
         tile = u.tile if u.tile is not None else "None"

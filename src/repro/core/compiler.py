@@ -35,6 +35,7 @@ from typing import Callable, Dict, Optional, Union
 
 import numpy as np
 
+from repro import obs
 from repro.profiler.cache import (CacheEntry, VariantCache, source_hash)
 from repro.profiler.hints import (synthesize_hint_tiers, synthesize_hints,
                                   type_signature)
@@ -43,6 +44,17 @@ from repro.profiler.tracer import FunctionTrace, Tracer
 from . import codegen, cost, parser, schedule as schedule_mod, scop
 from .multiversion import CompiledKernel, Variant
 from .pfor import PforConfig
+
+
+def _stage(scope, kernel: str, name: str, t0: float, t1: float,
+           tracing: bool) -> None:
+    """File one compile-pipeline stage: duration into the kernel's
+    ``compile.<name>`` metrics scope, and (when tracing) a span on the
+    head timeline."""
+    scope.add_time(name + "_s", t1 - t0)
+    if tracing:
+        obs.recorder().record(name, "compile", t0, t1,
+                              args={"kernel": kernel})
 
 
 def _exec_variant(gen: codegen.GeneratedVariant, xp, extra: Dict) -> Callable:
@@ -120,9 +132,17 @@ def compile_kernel(
     enable_jax: bool = True,
     hints: Optional[Dict[str, str]] = None,
     cache: Optional[Union[VariantCache, str]] = None,
+    trace=None,
 ) -> CompiledKernel:
     if isinstance(cache, str):
         cache = VariantCache(cache)
+    # trace=True (or REPRO_TRACE=1) records compile-pipeline spans; the
+    # per-stage duration counters below are always on
+    if trace:
+        obs.enable()
+    tracing = obs.enabled() if trace is None else bool(trace)
+    kname = getattr(fn, "__name__", "kernel")
+    cscope = obs.metrics.scope(f"compile.{kname}")
 
     pfor_cfg = PforConfig(runtime=runtime, tile=tile, workers=workers)
     pfor_cfg.distribute_threshold = cost.DISTRIBUTE_FLOP_THRESHOLD
@@ -149,20 +169,33 @@ def compile_kernel(
         type_sig = _resolved_type_sig(fn, hints)
         entry = cache.get(src_h, type_sig, backend_tag)
         if entry is not None:
+            tr0 = time.perf_counter()
             ck = _rebuild_from_entry(fn, entry, pfor_cfg, accel_threshold)
             if ck is not None:
+                _stage(cscope, kname, "rebuild", tr0,
+                       time.perf_counter(), tracing)
                 cache.stats.codegen_skipped += 1
                 return ck
 
     t0 = time.perf_counter()
     tir_fn = parser.parse_function(fn, hint_overrides=hints)
+    t_parse = time.perf_counter()
     program = scop.extract(tir_fn)
+    t_scop = time.perf_counter()
     # Each backend gets the fusion profile that matches its memory
     # behaviour: np mutates in place (contract temps, keep aug statements
     # distributed as library calls); jnp materializes every statement
     # (fuse everything legal so .at[].set copies disappear).
     sched = schedule_mod.schedule(program, distribute=distribute, fuse=fuse,
                                   fusion_profile="inplace")
+    t_sched = time.perf_counter()
+    _stage(cscope, kname, "parse", t0, t_parse, tracing)
+    _stage(cscope, kname, "scop", t_parse, t_scop, tracing)
+    _stage(cscope, kname, "schedule", t_scop, t_sched, tracing)
+    # fusion + dependence ran inside schedule(); it leaves stamped
+    # sub-stage intervals behind rather than importing obs itself
+    for nm, s0, s1 in getattr(sched, "stage_spans", ()):
+        _stage(cscope, kname, nm, s0, s1, tracing)
     # the cluster runtime diffs only schedule-written arrays when
     # gathering pfor chunk results from worker processes
     pfor_cfg.written = tuple(sched.written)
@@ -181,11 +214,15 @@ def compile_kernel(
     # cached entry is self-contained and a runtime can be bound to the
     # compiled kernel later — the cost is one extra codegen pass here.
     hybrid = jax_ok and sched.has_pfor
+    t_cg0 = time.perf_counter()
     gen_np = codegen.generate(sched, "np", pfor_jnp=hybrid)
     variants["np"] = _make_np_variant(gen_np, pfor_cfg)
+    _stage(cscope, kname, "codegen", t_cg0, time.perf_counter(),
+           tracing)
 
     # Whole-kernel accelerator variant (pfor-free kernels only)
     if enable_jax and not sched.has_opaque and not sched.has_pfor:
+        t_cg0 = time.perf_counter()
         try:
             # with fusion off both profiles schedule identically
             sched_fn = sched if not fuse else schedule_mod.schedule(
@@ -197,6 +234,8 @@ def compile_kernel(
                 variants["jnp"] = v
         except codegen.EmitError:
             pass
+        _stage(cscope, kname, "codegen", t_cg0, time.perf_counter(),
+               tracing)
     compile_s = time.perf_counter() - t0
 
     ck = CompiledKernel(fn, tir_fn.params, sched, variants,
@@ -206,6 +245,7 @@ def compile_kernel(
     if cache is not None:
         generated = {name: v.generated for name, v in variants.items()
                      if v.generated is not None}
+        t_cs0 = time.perf_counter()
         try:
             cache.put(CacheEntry(
                 fn_name=ck.__name__, src_hash=src_h, type_sig=type_sig,
@@ -213,6 +253,8 @@ def compile_kernel(
                 sched=sched, generated=generated, compile_s=compile_s))
         except Exception:
             pass  # cache write failure must never break compilation
+        _stage(cscope, kname, "cache_store", t_cs0,
+               time.perf_counter(), tracing)
     return ck
 
 

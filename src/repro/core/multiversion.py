@@ -22,6 +22,9 @@ from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
+from repro.obs.metrics import Counter
+
 from . import cost
 from .codegen import GeneratedVariant
 from .schedule import Schedule
@@ -34,8 +37,37 @@ class Variant:
     name: str                    # 'jnp' | 'np' | 'original'
     fn: Callable
     generated: Optional[GeneratedVariant] = None
-    calls: int = 0
-    total_s: float = 0.0
+
+    def __post_init__(self):
+        # per-variant call/latency cells: standalone Variants keep
+        # private counters; once a CompiledKernel adopts the variant,
+        # bind_metrics swaps in registry-backed ones under the kernel's
+        # scope — same attribute API either way
+        self._calls = Counter()
+        self._total = Counter()
+
+    def bind_metrics(self, scope) -> None:
+        c, t = scope.counter(f"{self.name}.calls"), \
+            scope.counter(f"{self.name}.total_s")
+        c.set(self._calls.value)
+        t.set(self._total.value)
+        self._calls, self._total = c, t
+
+    @property
+    def calls(self) -> int:
+        return self._calls.value
+
+    @calls.setter
+    def calls(self, v) -> None:
+        self._calls.set(v)
+
+    @property
+    def total_s(self) -> float:
+        return self._total.value
+
+    @total_s.setter
+    def total_s(self, v) -> None:
+        self._total.set(v)
 
 
 @dataclass
@@ -47,11 +79,19 @@ class DispatchRecord:
 
 
 class CompiledKernel:
-    """Callable decision tree over specialized variants."""
+    """Callable decision tree over specialized variants.
+
+    Dispatch counters live in the unified ``obs.metrics`` registry
+    under a per-instance ``kernel.<name>#N`` scope (the MetricAttr
+    descriptors and Variant metric cells keep every attribute
+    read/write site unchanged)."""
 
     # stop recording novel signatures past this point (pathologically
     # dynamic shapes must not grow memory without bound)
     MAX_TRACKED_SIGS = 4096
+
+    spec_hits = obs.MetricAttr("spec_hits")
+    bucket_hits = obs.MetricAttr("bucket_hits")
 
     def __init__(self, original: Callable, params: List[Tuple[str, TypeInfo]],
                  sched: Schedule, variants: Dict[str, Variant],
@@ -63,6 +103,12 @@ class CompiledKernel:
         self.variants = variants
         self.pfor_config = pfor_config
         self.accel_threshold = accel_threshold
+        self.__name__ = getattr(original, "__name__", "kernel")
+        self.__doc__ = getattr(original, "__doc__", None)
+        self._mscope = obs.metrics.unique_scope(
+            f"kernel.{self.__name__}")
+        for v in variants.values():
+            v.bind_metrics(self._mscope.sub("variants"))
         # ring buffer: long-running serving processes dispatch millions
         # of times; keep only the recent window
         self.history: Deque[DispatchRecord] = deque(maxlen=10_000)
@@ -72,7 +118,7 @@ class CompiledKernel:
         self.shape_counts: Dict[Tuple, int] = {}
         self.last_decisions: Dict[Tuple, Tuple[str, float, bool]] = {}
         self.specializations: Dict[Tuple, Any] = {}
-        self.spec_hits: int = 0
+        self.spec_hits = 0
         # per-signature latency EMAs: tree-dispatched calls vs pinned
         # calls — the specializer's demotion sweep compares them to spot
         # regressions (a pin whose decision went stale)
@@ -81,10 +127,8 @@ class CompiledKernel:
         # power-of-two shape bucket, so mild shape drift (batch 60 ↔ 64)
         # keeps the fast path instead of falling back to the full tree
         self.bucket_specs: Dict[Tuple, Any] = {}
-        self.bucket_hits: int = 0
+        self.bucket_hits = 0
         self.from_cache: bool = False   # built from the persistent cache?
-        self.__name__ = getattr(original, "__name__", "kernel")
-        self.__doc__ = getattr(original, "__doc__", None)
 
     # -- helpers --------------------------------------------------------
     def _bind(self, args, kwargs) -> Dict[str, Any]:

@@ -17,6 +17,7 @@ Two optimization policies, exactly as the paper states them:
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple, Union
 
@@ -256,17 +257,25 @@ def schedule(program: ScopProgram, distribute: bool = True,
     params = frozenset(n for n, _ in program.fn.params)
     units = _schedule_items(program.items, 0, distribute, params)
     sched = Schedule(program, units)
+    # per-stage perf_counter stamps: the compiler turns these into
+    # compile-pipeline spans/metrics (this module stays obs-free)
+    stage_spans: List[Tuple[str, float, float]] = []
     if fuse:
         from . import fusion  # deferred: fusion → cost → schedule
+        t0 = time.perf_counter()
         fusion.fuse(sched, profile=fusion_profile)
+        stage_spans.append(("fusion", t0, time.perf_counter()))
     sched.written = _written_arrays(sched.units)
     # chunk-sliceability is a property of the *post-fusion* body: fusion
     # may rewrite accesses, so the analysis runs on what codegen will emit
+    t0 = time.perf_counter()
     for u in _flatten(sched.units):
         if isinstance(u, PforUnit):
             u.sliceable = _pfor_sliceable(u)
             u.jnp_feasible = not any(
                 isinstance(b, OpaqueUnit) for b in _flatten(u.body))
+    stage_spans.append(("dependence", t0, time.perf_counter()))
+    sched.stage_spans = stage_spans
     sched.has_opaque = any(
         isinstance(u, OpaqueUnit) for u in _flatten(sched.units))
     sched.has_pfor = any(

@@ -40,6 +40,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
+
 from .device import DeviceProfile, measure_profile, sim_gpu_for
 from .objects import (HEAD, LOST, REMOTE, ClusterRef, ObjectPlane,
                       TaskSpec)
@@ -80,6 +82,12 @@ class _TaskState:
     finished: bool = False
     error: Optional[str] = None
     event: threading.Event = field(default_factory=threading.Event)
+    # tracing: the in-flight span begun at dispatch (ended by whichever
+    # thread observes completion — obs tokens are end-idempotent, so a
+    # resubmit racing its own late "done" records the span once) and
+    # the base args stamped onto this chunk's worker-side spans
+    token: Any = None
+    span_meta: Optional[Dict[str, Any]] = None
 
 
 class _WorkerHandle:
@@ -90,12 +98,27 @@ class _WorkerHandle:
         self.sim_gpu = sim_gpu   # respawns inherit the GPU pose
         self.profile: Optional[DeviceProfile] = None
         self.hello = threading.Event()
+        # head_perf_counter − worker_perf_counter, estimated from the
+        # t_mono stamps piggybacked on hello/pong replies (see
+        # note_clock); None until the first stamped reply lands
+        self.clock_offset: Optional[float] = None
         self.alive = True
         self.draining = False   # clean scale-down, not a failure
         self.inflight: set = set()
         self.blobs: set = set()                    # bids with skeleton
         self.blob_cells: Dict[int, Dict[str, str]] = {}  # bid→cell→hash
         self.send_lock = threading.Lock()
+
+    def note_clock(self, t_worker: float) -> None:
+        """Refine this worker's clock offset from one stamped reply.
+        ``recv_time − t_worker`` over-estimates the true offset by
+        exactly the reply's one-way latency, so the *minimum* across
+        samples (startup hello, every profile/ping handshake) is the
+        tightest estimate — error bounded by the best observed one-way
+        trip, well inside the handshake RTT."""
+        off = time.perf_counter() - t_worker
+        if self.clock_offset is None or off < self.clock_offset:
+            self.clock_offset = off
 
     def send(self, msg) -> None:
         with self.send_lock:
@@ -144,7 +167,28 @@ class _WorkerHandle:
 
 
 class ClusterRuntime:
-    """Head process of the multi-process cluster."""
+    """Head process of the multi-process cluster.
+
+    Telemetry counters below are class-level :class:`obs.MetricAttr`
+    descriptors: the attribute reads/writes every existing call site
+    (and test) uses are unchanged, but the values live in the unified
+    ``obs.metrics`` registry under this instance's ``cluster#N`` scope —
+    one store for stats(), bench rows, and traces."""
+
+    replays = obs.MetricAttr("replays")
+    resubmits = obs.MetricAttr("resubmits")
+    worker_deaths = obs.MetricAttr("worker_deaths")
+    pfor_runs = obs.MetricAttr("pfor_runs")
+    chunks_dispatched = obs.MetricAttr("chunks_dispatched")
+    bytes_shipped = obs.MetricAttr("bytes_shipped")
+    gpu_chunks = obs.MetricAttr("gpu_chunks")
+    cpu_chunks = obs.MetricAttr("cpu_chunks")
+    sliced_args = obs.MetricAttr("sliced_args")
+    bytes_saved_sliced = obs.MetricAttr("bytes_saved_sliced")
+    blob_hits = obs.MetricAttr("blob_hits")
+    blob_misses = obs.MetricAttr("blob_misses")
+    cells_shipped = obs.MetricAttr("cells_shipped")
+    cells_skipped = obs.MetricAttr("cells_skipped")
 
     def __init__(self, workers: int = 2, *,
                  start_method: Optional[str] = None,
@@ -153,7 +197,8 @@ class ClusterRuntime:
                  cache_dir: Optional[str] = None,
                  weights: PlacementWeights = PlacementWeights(),
                  hello_timeout_s: float = 30.0,
-                 sim_gpu_workers: Sequence[int] = ()):
+                 sim_gpu_workers: Sequence[int] = (),
+                 trace=None):
         if start_method is None:
             # GPU-capable workers (real or posing) may execute jnp twin
             # bodies, and XLA does not survive a fork of a head that has
@@ -191,6 +236,21 @@ class ClusterRuntime:
         self._fetch_events: Dict[int, threading.Event] = {}
         self._pongs: Dict[int, "threading.Event"] = {}
         self._shutdown = False
+        # tracing: ``trace`` is False/None (off unless REPRO_TRACE=1),
+        # True, or a path — a path additionally exports the Chrome
+        # trace there at shutdown
+        self._trace_path = trace if isinstance(trace, str) else None
+        if trace:
+            obs.enable()
+        self.trace = obs.enabled() if trace is None else bool(trace)
+        # unified metrics: this runtime's scope in the obs registry; the
+        # MetricAttr class descriptors above resolve against it, so it
+        # must exist before the zeroing assignments below
+        self._mscope = obs.metrics.unique_scope("cluster")
+        self._phase = self._mscope.sub("phase")
+        self._round_seq = itertools.count()
+        self._round_busy: Dict[int, float] = {}     # round → worker-busy s
+        self._round_compute: Dict[int, float] = {}  # round → Σ run-span s
         # telemetry
         self.replays = 0
         self.resubmits = 0
@@ -205,8 +265,8 @@ class ClusterRuntime:
         # downgrade)
         self.gpu_chunks = 0            # chunks dispatched on the jnp twin
         self.cpu_chunks = 0            # chunks dispatched on the np body
-        self.unit_backend: Dict[str, Dict[str, int]] = {}
-        self.chunks_executed: Dict[str, int] = {}
+        self.unit_backend = self._mscope.dictmetric("unit_backend")
+        self.chunks_executed = self._mscope.dictmetric("chunks_executed")
         # data-movement telemetry (chunk slicing + blob cache)
         self.sliced_args = 0           # array args shipped as row slices
         self.bytes_saved_sliced = 0    # vs shipping each chunk the whole
@@ -251,11 +311,11 @@ class ClusterRuntime:
         return wh
 
     def _await_hellos(self, timeout_s: float) -> None:
-        deadline = time.time() + timeout_s
+        deadline = time.monotonic() + timeout_s
         with self._lock:
             handles = list(self._handles.values())
         for wh in handles:
-            if not wh.hello.wait(max(0.1, deadline - time.time())):
+            if not wh.hello.wait(max(0.1, deadline - time.monotonic())):
                 raise TimeoutError(
                     f"worker {wh.wid} never said hello")
 
@@ -323,10 +383,13 @@ class ClusterRuntime:
         kind = msg[0]
         if kind == "hello":
             wh.profile = DeviceProfile.from_dict(msg[1])
+            if len(msg) > 2:
+                wh.note_clock(msg[2])
             wh.hello.set()
         elif kind == "done":
             _, tid, oid, nbytes, payload = msg[:5]
             ran = msg[5] if len(msg) > 5 else None
+            wspans = msg[6] if len(msg) > 6 else None
             if ran is not None:
                 # what actually *executed* (vs the dispatch-intent
                 # gpu_chunks/cpu_chunks counters, which a mid-flight
@@ -334,14 +397,24 @@ class ClusterRuntime:
                 with self._lock:
                     self.chunks_executed[ran] = \
                         self.chunks_executed.get(ran, 0) + 1
+            with self._lock:
+                ts = self._tasks.get(tid)
+                wh.inflight.discard(tid)
+            if wspans and ts is not None and self.trace:
+                # worker spans land *before* the result fulfills, so a
+                # gather that returns has this chunk's busy seconds
+                # already accumulated into its round
+                self._ingest_worker_spans(wh, ts, ran, wspans)
             if payload is not None:
                 self.plane.fulfill_inline(oid, payload[1])
             else:
                 self.plane.fulfill_remote(oid, wh.wid, nbytes)
-            with self._lock:
-                ts = self._tasks.get(tid)
-                wh.inflight.discard(tid)
             if ts is not None:
+                if ts.token is not None:
+                    # park the in-flight span on the worker's track so
+                    # the viewer nests the remote phases under it
+                    ts.token.tid = obs.worker_tid(wh.wid)
+                    obs.end(ts.token, wid=wh.wid, ran=ran)
                 ts.finished = True
                 ts.event.set()
         elif kind == "err":
@@ -359,6 +432,7 @@ class ClusterRuntime:
                                  daemon=True).start()
             else:
                 ts.error = message
+                obs.end(ts.token, error=True)
                 self.plane.fulfill_inline(ts.spec.out.oid,
                                           _TaskErr(message, tb))
                 ts.finished = True
@@ -377,9 +451,40 @@ class ClusterRuntime:
             if ev is not None:
                 ev.set()
         elif kind == "pong":
+            if len(msg) > 2:
+                wh.note_clock(msg[2])
             ev = self._pongs.get(wh.wid)
             if ev is not None:
                 ev.set()
+
+    def _ingest_worker_spans(self, wh: _WorkerHandle, ts: _TaskState,
+                             ran: Optional[str], wspans) -> None:
+        """Land one task's worker-side spans on the head timeline. The
+        worker measured them on its own monotonic clock; the handle's
+        offset estimate re-bases them, and the per-round busy/compute
+        accumulators behind the ``idle_s``/``compute_s`` phase metrics
+        pick up their totals."""
+        rec = obs.recorder()
+        track = obs.worker_tid(wh.wid)
+        rec.name_track(0, track, f"worker{wh.wid}")
+        base: Dict[str, Any] = {"task": ts.spec.task_id, "wid": wh.wid}
+        if ts.span_meta:
+            base.update(ts.span_meta)
+        if ran is not None:
+            base["backend"] = ran
+        busy = rec.record_external(wspans,
+                                   offset=wh.clock_offset or 0.0,
+                                   pid=0, tid=track, base_args=base)
+        rid = (ts.span_meta or {}).get("round")
+        if rid is None:
+            return
+        compute = sum(max(0.0, s[2] - s[1]) for s in wspans
+                      if s[0] == "run")
+        with self._lock:
+            self._round_busy[rid] = \
+                self._round_busy.get(rid, 0.0) + busy
+            self._round_compute[rid] = \
+                self._round_compute.get(rid, 0.0) + compute
 
     def _on_worker_death(self, wh: _WorkerHandle) -> None:
         with self._lock:
@@ -412,6 +517,7 @@ class ClusterRuntime:
             ts.spec.attempts += 1
             if ts.spec.attempts >= self.max_attempts:
                 ts.error = f"worker {wh.wid} died; attempts exhausted"
+                obs.end(ts.token, error=True)
                 self.plane.fulfill_inline(ts.spec.out.oid,
                                           _TaskErr(ts.error))
                 ts.finished = True
@@ -447,7 +553,7 @@ class ClusterRuntime:
 
     def _ensure_arg_ready(self, ref: ClusterRef,
                           timeout: Optional[float] = 60.0) -> None:
-        deadline = None if timeout is None else time.time() + timeout
+        deadline = None if timeout is None else time.monotonic() + timeout
         while True:
             meta = self.plane.meta(ref.oid)
             if meta.state in (HEAD, REMOTE):
@@ -455,7 +561,7 @@ class ClusterRuntime:
             if meta.state == LOST:
                 self._replay(ref.oid)
             self.plane.wait_ready(ref.oid, 0.05)
-            if deadline is not None and time.time() > deadline:
+            if deadline is not None and time.monotonic() > deadline:
                 raise TimeoutError(f"arg {ref} never became ready")
 
     def _dispatch(self, ts: _TaskState) -> None:
@@ -475,6 +581,7 @@ class ClusterRuntime:
                         # a failed upstream must poison dependents, not
                         # travel to a worker as an argument value
                         ts.error = f"upstream task failed: {meta.value}"
+                        obs.end(ts.token, error=True)
                         self.plane.fulfill_inline(spec.out.oid,
                                                   _TaskErr(ts.error))
                         ts.finished = True
@@ -487,6 +594,7 @@ class ClusterRuntime:
                     # it: fail the task so waiters raise instead of
                     # spinning forever
                     ts.error = "no live workers and respawn disabled"
+                    obs.end(ts.token, error=True)
                     self.plane.fulfill_inline(spec.out.oid,
                                               _TaskErr(ts.error))
                     ts.finished = True
@@ -556,8 +664,11 @@ class ClusterRuntime:
                 raise ValueError(f"arg {a} not ready")
         wire = {"kind": spec.kind, "out_oid": spec.out.oid,
                 "gather": spec.gather, "args": wire_args}
+        if self.trace:
+            wire["trace"] = True   # worker measures + returns its spans
         if spec.kind == "chunk":
             parts: ClosureParts = spec.parts
+            t0 = time.perf_counter()
             # blob counters update here because ship_blob really sent
             # (or raised); sliced counters wait until the task message
             # itself lands, in _count_chunk_shipment — a placement retry
@@ -570,6 +681,13 @@ class ClusterRuntime:
             # payload/n instead of the whole closure (ROADMAP item #1)
             sliced_wire = {nm: parts.sliced[nm][spec.lo:spec.hi]
                            for nm in spec.sliced}
+            t1 = time.perf_counter()
+            self._phase.add_time("ship_s", t1 - t0)
+            if self.trace:
+                obs.recorder().record(
+                    "ship", "pfor", t0, t1,
+                    args={"task": spec.task_id, "wid": wh.wid,
+                          "cells": cells, "bytes": nbytes})
             wire.update(blob_id=spec.blob_id, lo=spec.lo, hi=spec.hi,
                         written=spec.written, sliced=sliced_wire,
                         backend=spec.backend)
@@ -607,7 +725,7 @@ class ClusterRuntime:
         if isinstance(ref_or_refs, list):
             return [self.get(r, timeout) for r in ref_or_refs]
         ref: ClusterRef = ref_or_refs
-        deadline = None if timeout is None else time.time() + timeout
+        deadline = None if timeout is None else time.monotonic() + timeout
         while True:
             meta = self.plane.meta(ref.oid)
             if meta.state == HEAD:
@@ -622,13 +740,13 @@ class ClusterRuntime:
             elif meta.state == LOST:
                 self._replay(ref.oid)
             self.plane.wait_ready(ref.oid, 0.05)
-            if deadline is not None and time.time() > deadline:
+            if deadline is not None and time.monotonic() > deadline:
                 raise TimeoutError(f"timed out waiting for {ref}")
 
     def wait(self, refs: Sequence[ClusterRef], num_returns: int = 1,
              timeout: Optional[float] = None):
         """ray.wait analogue: (ready, pending)."""
-        deadline = None if timeout is None else time.time() + timeout
+        deadline = None if timeout is None else time.monotonic() + timeout
         ready, pending = [], list(refs)
         while len(ready) < num_returns and pending:
             for r in list(pending):
@@ -637,7 +755,7 @@ class ClusterRuntime:
                     pending.remove(r)
             if len(ready) >= num_returns:
                 break
-            if deadline is not None and time.time() > deadline:
+            if deadline is not None and time.monotonic() > deadline:
                 break
             time.sleep(0.005)
         return ready, pending
@@ -660,12 +778,12 @@ class ClusterRuntime:
         except OSError:
             self._fetch_events.pop(oid, None)
             return None
-        deadline = time.time() + 30.0
+        deadline = time.monotonic() + 30.0
         while not ev.wait(0.05):
             if not wh.alive:      # owner died before replying
                 self._fetch_events.pop(oid, None)
                 return None
-            if time.time() > deadline:
+            if time.monotonic() > deadline:
                 self._fetch_events.pop(oid, None)
                 return None
         meta = self.plane.meta(oid)
@@ -786,6 +904,10 @@ class ClusterRuntime:
         n = hi - lo
         if n <= 0:
             return
+        tracing = self.trace
+        rid = next(self._round_seq)
+        ph = self._phase
+        rt0 = time.perf_counter()
         arrays = {n_: v for n_, v in closure_arrays(body).items()
                   if isinstance(v, np.ndarray)}
         # trust-but-verify the analysis against the live values: slicing
@@ -799,7 +921,9 @@ class ClusterRuntime:
         jnp_body = getattr(body, "__jnp__", None)
         if jnp_body is not None:
             bodies["jnp"] = jnp_body
+        t_split0 = time.perf_counter()
         parts_by = split_fn_variants(bodies, slice_names)
+        t_split1 = time.perf_counter()
         views = self._views()
         if not views:
             raise ClusterTaskError("no live workers for pfor")
@@ -844,6 +968,20 @@ class ClusterRuntime:
             chunk_backends = list(backends)
         ub = self.unit_backend.setdefault(
             f"{body.__name__}@{parts_by['np'].code_hash[:8]}", {})
+        # plan phase = everything so far except the split (body
+        # serialization), which reports on its own — the two segments
+        # around it both count as planning
+        t_plan1 = time.perf_counter()
+        ph.add_time("plan_s", (t_split0 - rt0) + (t_plan1 - t_split1))
+        ph.add_time("split_s", t_split1 - t_split0)
+        if tracing:
+            rec = obs.recorder()
+            rec.record("plan", "pfor", rt0, t_split0,
+                       args={"round": rid})
+            rec.record("split", "pfor", t_split0, t_split1,
+                       args={"round": rid})
+            rec.record("plan", "pfor", t_split1, t_plan1,
+                       args={"round": rid})
         chunks = []
         for r, bk in zip(ranges, chunk_backends):
             if len(r) == 0:
@@ -862,6 +1000,12 @@ class ClusterRuntime:
                             device_pref=({"np": "cpu", "jnp": "gpu"}[bk]
                                          if hetero else ""))
             ts = _TaskState(spec)
+            if tracing:
+                ts.span_meta = {"round": rid, "lo": r.start,
+                                "hi": r.stop}
+                ts.token = obs.begin("chunk_inflight", cat="pfor",
+                                     round=rid, task=tid, lo=r.start,
+                                     hi=r.stop, backend=bk)
             with self._lock:
                 self._tasks[tid] = ts
                 self._producer[out.oid] = tid
@@ -869,14 +1013,35 @@ class ClusterRuntime:
             chunks.append((out, spec))
             self.chunks_dispatched += 1
             ub[bk] = ub.get(bk, 0) + 1
+        t_disp1 = time.perf_counter()
+        # dispatch wall includes the per-chunk shipping done inside
+        # _wire_spec — ship_s (accumulated there) is its subset
+        ph.add_time("dispatch_s", t_disp1 - t_plan1)
+        if tracing:
+            obs.recorder().record("dispatch", "pfor", t_plan1, t_disp1,
+                                  args={"round": rid,
+                                        "chunks": len(chunks)})
         self.pfor_runs += 1
         try:
             for ref, spec in chunks:
                 # no per-chunk timeout: a healthy chunk may legitimately
                 # compute for minutes; failures surface via worker-death
                 # resubmission (bounded by max_attempts) instead
+                g0 = time.perf_counter()
                 updates = self.get(ref, timeout=None)
+                g1 = time.perf_counter()
                 self._merge_updates(arrays, updates, spec)
+                g2 = time.perf_counter()
+                ph.add_time("gather_s", g1 - g0)
+                ph.add_time("merge_s", g2 - g1)
+                if tracing:
+                    rec = obs.recorder()
+                    rec.record("gather", "pfor", g0, g1,
+                               args={"round": rid,
+                                     "task": spec.task_id})
+                    rec.record("merge", "pfor", g1, g2,
+                               args={"round": rid,
+                                     "task": spec.task_id})
         finally:
             # chunk updates are consumed; their lineage window is over.
             # Drop every per-chunk record so a serving loop calling the
@@ -901,6 +1066,24 @@ class ClusterRuntime:
                     evicted = rec is None or rec.bid != bid
                 if evicted:
                     self._drop_blob(bid)
+            rt1 = time.perf_counter()
+            wall = rt1 - rt0
+            ph.add_time("round_s", wall)
+            with self._lock:
+                busy = self._round_busy.pop(rid, 0.0)
+                compute = self._round_compute.pop(rid, 0.0)
+            if tracing:
+                # compute = Σ worker "run" spans; idle = fleet capacity
+                # the round left on the table (round wall × workers −
+                # everything the workers spent on our chunks)
+                nw = max(1, len(views))
+                ph.add_time("compute_s", compute)
+                ph.add_time("idle_s", max(0.0, wall * nw - busy))
+                obs.recorder().record(
+                    "pfor_round", "pfor", rt0, rt1,
+                    args={"round": rid, "name": body.__name__,
+                          "unit": getattr(body, "__unit__", None),
+                          "chunks": len(chunks), "workers": nw})
 
     def distribute_profitable(self, flops: float, payload_bytes: int,
                               n_chunks: int,
@@ -1004,10 +1187,18 @@ class ClusterRuntime:
         }
         return out
 
+    def phase_breakdown(self) -> Dict[str, float]:
+        """Measured per-phase seconds for this runtime's pfor rounds
+        (``plan/split/ship/dispatch/gather/merge/round``, plus
+        ``compute``/``idle`` when tracing is on), straight from the
+        ``cluster#N.phase`` scope of the unified metrics registry."""
+        return self._phase.snapshot()
+
     def telemetry(self) -> Dict[str, Any]:
         out = self.stats()
         out["profiles"] = [p.as_dict() for p in self.profiles()]
         out["local_gflops"] = self.local_profile.gflops
+        out["phases"] = self.phase_breakdown()
         if self.variant_cache is not None:
             out["cache"] = self.variant_cache.telemetry()
         return out
@@ -1021,14 +1212,19 @@ class ClusterRuntime:
                 wh.send(("shutdown",))
             except OSError:
                 pass
-        deadline = time.time() + 2.0
+        deadline = time.monotonic() + 2.0
         for wh in handles:
-            wh.proc.join(max(0.05, deadline - time.time()))
+            wh.proc.join(max(0.05, deadline - time.monotonic()))
             if wh.proc.is_alive():
                 wh.proc.terminate()
                 wh.proc.join(1.0)
         for wh in handles:
             wh.close_conn()
+        if self._trace_path and self.trace:
+            try:
+                obs.export_chrome_trace(self._trace_path)
+            except OSError:
+                pass
 
     def __enter__(self) -> "ClusterRuntime":
         return self

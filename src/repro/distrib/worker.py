@@ -17,10 +17,11 @@ the same framing a TCP transport would use):
                  | ("blob", bid, skeleton_or_None, {cell: value})
                  | ("unblob", bid) | ("get", oid) | ("free", oid)
                  | ("ping", payload) | ("profile",) | ("shutdown",)
-  worker → head: ("hello", profile)
-                 | ("done", tid, oid, nbytes, payload, ran_backend)
+  worker → head: ("hello", profile, t_mono)
+                 | ("done", tid, oid, nbytes, payload, ran_backend,
+                    spans_or_None)
                  | ("err", tid, message, traceback)
-                 | ("obj", oid, payload) | ("pong", nbytes)
+                 | ("obj", oid, payload) | ("pong", nbytes, t_mono)
 
 where ``payload`` is ``("v", value)`` when the value travels with the
 message and ``None`` when it stayed (or was not found) on the worker —
@@ -33,11 +34,20 @@ changed on the head (the serving-loop path). Blob bodies persist across
 pfor calls; after every chunk the written broadcast cells are rolled
 back to pristine, so the head's record of what each worker holds stays
 content-exact.
+
+Tracing (``repro.obs``): when a task spec carries ``trace=True`` the
+worker measures its execution phases — deserialize (body assembly),
+restore (sliced-cell rebase), run, diff — as ``(name, t0, t1, args)``
+tuples on its own ``time.perf_counter()`` clock and piggybacks them on
+the "done" message; no extra round-trips. The ``t_mono`` stamp on
+"hello"/"pong" replies is what lets the head estimate this worker's
+clock offset and land the spans on one aligned timeline.
 """
 
 from __future__ import annotations
 
 import pickle
+import time
 import traceback
 from typing import Any, Dict, Tuple
 
@@ -50,8 +60,8 @@ from .serial import assemble_fn, closure_arrays, loads_fn, rebase_chunk
 INLINE_MAX = 32 * 1024
 
 
-def _chunk_updates(body, lo: int, hi: int,
-                   written: Tuple[str, ...]) -> Dict[str, tuple]:
+def _chunk_updates(body, lo: int, hi: int, written: Tuple[str, ...],
+                   spans=None) -> Dict[str, tuple]:
     """Run a pfor chunk and extract its disjoint-region writes.
 
     The chunk writes in place into the *worker's* copies of the captured
@@ -73,13 +83,19 @@ def _chunk_updates(body, lo: int, hi: int,
                if not written or n in written}
     snaps = {n: a.copy() for n, a in targets.items()}
     try:
+        t0 = time.perf_counter()
         body(lo, hi)
+        t1 = time.perf_counter()
+        if spans is not None:
+            spans.append(("run", t0, t1, None))
         updates: Dict[str, tuple] = {}
         for name, arr in targets.items():
             mask = np.asarray(arr != snaps[name])
             if mask.any():
                 idx = np.flatnonzero(mask.ravel())
                 updates[name] = (idx, np.asarray(arr.ravel()[idx]))
+        if spans is not None:
+            spans.append(("diff", t1, time.perf_counter(), None))
         return updates
     finally:
         for name, arr in targets.items():
@@ -147,22 +163,32 @@ class WorkerState:
                 raise ValueError(f"bad arg entry {kind!r}")
         return out
 
-    def run_task(self, spec) -> Any:
+    def run_task(self, spec, spans=None) -> Any:
         if spec["kind"] == "chunk":
             lo = spec["lo"]
+            t0 = time.perf_counter()
             body, cellmap = self._body_for(spec["blob_id"])
+            t1 = time.perf_counter()
             for name, chunk in (spec.get("sliced") or {}).items():
                 # per-chunk rows, re-based so the body's global leading-
                 # axis indices resolve; replaced wholesale on every task,
                 # so nothing to roll back afterwards
                 cellmap[name].cell_contents = rebase_chunk(chunk, lo)
+            if spans is not None:
+                spans.append(("deserialize", t0, t1, None))
+                spans.append(("restore", t1, time.perf_counter(), None))
             self.chunks_run += 1
             return _chunk_updates(body, lo, spec["hi"],
-                                  tuple(spec.get("written") or ()))
+                                  tuple(spec.get("written") or ()),
+                                  spans)
         fn = loads_fn(spec["fn_blob"])
         args = self.resolve_args(spec["args"])
         self.tasks_run += 1
-        return fn(*args)
+        t0 = time.perf_counter()
+        result = fn(*args)
+        if spans is not None:
+            spans.append(("run", t0, time.perf_counter(), None))
+        return result
 
 
 def worker_main(conn, wid: int, sim_gpu: bool = False) -> None:
@@ -173,9 +199,12 @@ def worker_main(conn, wid: int, sim_gpu: bool = False) -> None:
     wid."""
     state = WorkerState(wid, sim_gpu=sim_gpu)
     try:
+        # the perf_counter stamp rides right next to the send so the
+        # head's receive-time-minus-stamp offset estimate is bounded by
+        # one one-way pipe latency, not by profile-measurement time
         conn.send(("hello",
                    measure_profile(wid, sim_gpu=sim_gpu or None)
-                   .as_dict()))
+                   .as_dict(), time.perf_counter()))
     except (EOFError, OSError, BrokenPipeError):
         return
     while True:
@@ -187,8 +216,9 @@ def worker_main(conn, wid: int, sim_gpu: bool = False) -> None:
         try:
             if kind == "task":
                 _, tid, spec = msg
+                spans = [] if spec.get("trace") else None
                 try:
-                    result = state.run_task(spec)
+                    result = state.run_task(spec, spans)
                 except BaseException as exc:  # noqa: BLE001
                     conn.send(("err", tid, repr(exc),
                                traceback.format_exc()))
@@ -203,10 +233,11 @@ def worker_main(conn, wid: int, sim_gpu: bool = False) -> None:
                        if spec["kind"] == "chunk" else None)
                 if spec.get("gather") or nbytes <= INLINE_MAX:
                     conn.send(("done", tid, oid, nbytes, ("v", result),
-                               ran))
+                               ran, spans))
                 else:
                     state.objects[oid] = result
-                    conn.send(("done", tid, oid, nbytes, None, ran))
+                    conn.send(("done", tid, oid, nbytes, None, ran,
+                               spans))
             elif kind == "blob":
                 _, bid, skeleton, delta = msg
                 state.update_blob(bid, skeleton, delta)
@@ -222,14 +253,14 @@ def worker_main(conn, wid: int, sim_gpu: bool = False) -> None:
                 else:
                     conn.send(("obj", oid, None))
             elif kind == "ping":
-                conn.send(("pong", len(msg[1])))
+                conn.send(("pong", len(msg[1]), time.perf_counter()))
             elif kind == "profile":
                 # re-measure on request: the head serializes these so
                 # fleet micro-benchmarks never contend with each other
                 conn.send(("hello",
                            measure_profile(state.wid,
                                            sim_gpu=state.sim_gpu or None)
-                           .as_dict()))
+                           .as_dict(), time.perf_counter()))
             elif kind == "shutdown":
                 break
         except (EOFError, OSError, BrokenPipeError):

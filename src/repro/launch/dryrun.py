@@ -230,7 +230,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                 "mesh": "multi" if multi_pod else "single",
                 "status": "skipped", "reason": skip}
     mesh = make_production_mesh(multi_pod=multi_pod)
-    t0 = time.time()
+    t0 = time.perf_counter()
     p_shapes = jax.eval_shape(lambda: T.init_params(
         cfg, jax.random.key(0))[0])
     specs = _static_specs(cfg)
@@ -283,9 +283,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     with mesh:
         lowered = jitted.lower(*args)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
 
     result: Dict[str, Any] = {
         "arch": arch, "shape": shape_name,

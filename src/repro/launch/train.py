@@ -93,7 +93,7 @@ def main(argv=None) -> dict:
     ckpt = C.AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
 
     losses = []
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         with mesh:
             for i in range(start_step, start_step + args.steps):
@@ -103,7 +103,7 @@ def main(argv=None) -> dict:
                 losses.append(float(m["loss"]))
                 if (i + 1) % args.log_every == 0:
                     tput = (i + 1 - start_step) * args.batch * args.seq \
-                        / (time.time() - t0)
+                        / (time.perf_counter() - t0)
                     print(f"[train] step {i + 1} loss {losses[-1]:.4f} "
                           f"({tput:.0f} tok/s)", flush=True)
                 if ckpt and (i + 1) % args.ckpt_every == 0:

@@ -36,7 +36,7 @@ class Specialization:
     flops: float
     legality_ok: bool
     tier: str = "exact"
-    promoted_at: float = field(default_factory=time.time)
+    promoted_at: float = field(default_factory=time.monotonic)
     hits: int = 0
     latency_ema: Optional[float] = None   # maintained by CompiledKernel
 
@@ -117,7 +117,7 @@ class Specializer:
                 spec = Specialization(sig, variant_name, flops,
                                       legality_ok)
                 ck.install_specialization(spec)
-                self._hit_marks[(kname, sig)] = (0, 0, time.time())
+                self._hit_marks[(kname, sig)] = (0, 0, time.monotonic())
                 promoted.append(spec)
                 self.promotions.append((kname, spec))
                 if len(installed) >= self.max_per_kernel:
@@ -133,7 +133,7 @@ class Specializer:
         installed = getattr(ck, "specializations", None)
         if installed is None:
             return
-        now = time.time()
+        now = time.monotonic()
         for sig, spec in list(installed.items()):
             reason = None
             key = (kname, sig)

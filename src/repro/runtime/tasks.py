@@ -133,7 +133,7 @@ class TaskRuntime:
         if isinstance(ref_or_refs, list):
             return [self.get(r, timeout) for r in ref_or_refs]
         ref: ObjectRef = ref_or_refs
-        deadline = None if timeout is None else time.time() + timeout
+        deadline = None if timeout is None else time.monotonic() + timeout
         while True:
             if self.store.wait(ref, 0.05):
                 break
@@ -145,7 +145,7 @@ class TaskRuntime:
                 if (st is not None and st.finished_s is not None
                         and not self.store.available(ref)):
                     break
-            if deadline is not None and time.time() > deadline:
+            if deadline is not None and time.monotonic() > deadline:
                 raise TimeoutError(f"timed out waiting for {ref}")
         try:
             val = self.store.get_local(ref)
@@ -158,7 +158,7 @@ class TaskRuntime:
     def wait(self, refs: List[ObjectRef], num_returns: int = 1,
              timeout: Optional[float] = None):
         """ray.wait analogue: (ready, pending)."""
-        deadline = None if timeout is None else time.time() + timeout
+        deadline = None if timeout is None else time.monotonic() + timeout
         ready, pending = [], list(refs)
         while len(ready) < num_returns and pending:
             progressed = False
@@ -169,7 +169,7 @@ class TaskRuntime:
                     progressed = True
             if len(ready) >= num_returns:
                 break
-            if deadline is not None and time.time() > deadline:
+            if deadline is not None and time.monotonic() > deadline:
                 break
             if not progressed:
                 time.sleep(0.002)

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import transformer as T
 from repro.models.common import ArchConfig
 
@@ -43,7 +44,15 @@ class ServeEngine:
     (:class:`repro.profiler.cache.VariantCache`) are optional attachments;
     when present, :meth:`telemetry` folds their dispatch/cache counters
     into the engine's serving stats so one endpoint answers "what is the
-    compiler doing under this traffic"."""
+    compiler doing under this traffic".
+
+    Serving counters are registry-backed (``serve#N`` scope of
+    ``obs.metrics``) via MetricAttr descriptors — attribute semantics
+    unchanged, values readable alongside cluster/kernel metrics."""
+
+    ticks = obs.MetricAttr("ticks")
+    prefills = obs.MetricAttr("prefills")
+    tokens_generated = obs.MetricAttr("tokens_generated")
 
     def __init__(self, params, cfg: ArchConfig, *, n_slots: int = 4,
                  max_seq: int = 256, kernel_registry=None,
@@ -58,6 +67,7 @@ class ServeEngine:
         self.finished: List[Request] = []
         self.kernel_registry = kernel_registry
         self.variant_cache = variant_cache
+        self._mscope = obs.metrics.unique_scope("serve")
         self.ticks = 0
         self.prefills = 0
         self.tokens_generated = 0
