@@ -420,11 +420,133 @@ def run_hetero(smoke: bool = False, out_path: str = "BENCH_distrib.json"
     return rows
 
 
+def run_chaos(smoke: bool = False,
+              out_path: str = "FAULTS_distrib.json") -> Dict:
+    """Fault-injection drill: the STAP serving loop over the TCP
+    transport with seeded chaos — a worker SIGKILLed mid-loop, a worker
+    joining mid-loop, and every head→worker message delayed — must keep
+    producing atol-1e-8-correct answers with zero head-side exceptions,
+    and the joined worker must visibly take a share of the chunks.
+
+    A second drill collapses the whole fleet with respawn disabled and
+    checks the runtime degrades to correct local execution. The fault
+    journal + recovery counters are written to ``FAULTS_distrib.json``
+    (uploaded beside ``BENCH_distrib.json`` in CI)."""
+    import json
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from examples.stap import (ALPHA, LOADING, make_stap_data,
+                               stap_adaptive, stap_seq)
+    from repro.core.compiler import compile_kernel
+    from repro.distrib import ChaosPlan, ClusterRuntime
+
+    if smoke:
+        gates, k, dof, iters = 16, 16, 16, 30
+        calls = 8
+    else:
+        gates, k, dof, iters = 48, 32, 32, 120
+        calls = 12
+    snap, train, steer, out = make_stap_data(gates, k, dof)
+    out_ref = out.copy()
+    stap_seq(snap, train, steer, out_ref, gates, k, dof, iters,
+             ALPHA, LOADING)
+
+    plan = ChaosPlan(seed=7, delay_s=0.002)   # every message delayed
+    kill_at, join_at = 3, calls // 2
+    joined_wid = None
+    rt = ClusterRuntime(workers=2, transport="tcp", respawn=True,
+                        hb_interval_s=0.2, reconnect_grace_s=1.0,
+                        chaos=plan)
+    try:
+        ck = compile_kernel(stap_adaptive, runtime=rt, workers=2)
+        ck.pfor_config.distribute_threshold = 0
+        for call in range(calls):
+            if call == kill_at:
+                print(f"stap_chaos.kill,call={call},"
+                      f"wid={rt.kill_worker()}", flush=True)
+            if call == join_at:
+                joined_wid = rt.add_worker()
+                print(f"stap_chaos.join,call={call},wid={joined_wid}",
+                      flush=True)
+            out_a = out.copy()
+            ck.call_variant("np", snap, train, steer, out_a, gates, k,
+                            dof, iters, ALPHA, LOADING)
+            err = float(abs(out_a - out_ref).max())
+            assert err < 1e-8, \
+                f"chaos STAP mismatch at call {call}: {err:.2e}"
+        st = rt.stats()
+        by_worker = dict(st["chunks_executed_by_worker"])
+        assert st["worker_deaths"] >= 1, st["faults"]
+        assert st["faults"].get("respawns", 0) >= 1, st["faults"]
+        assert st["faults"].get("joins", 0) >= 1, st["faults"]
+        assert plan.delayed > 0, plan.stats()
+        assert joined_wid in by_worker and by_worker[joined_wid] > 0, \
+            f"joined worker {joined_wid} got no chunks: {by_worker}"
+        serving = {"calls": calls, "kill_at_call": kill_at,
+                   "join_at_call": join_at, "joined_wid": joined_wid,
+                   "max_abs_err": err,
+                   "chunks_executed_by_worker": by_worker,
+                   "worker_deaths": st["worker_deaths"],
+                   "faults": st["faults"], "chaos": plan.stats()}
+        events = list(rt.fault_events)
+    finally:
+        rt.shutdown()
+
+    # fleet collapse with respawn off: correctness must survive via
+    # in-process degradation, not hang or raise
+    rt = ClusterRuntime(workers=2, respawn=False)
+    try:
+        ck = compile_kernel(stap_adaptive, runtime=rt, workers=2)
+        ck.pfor_config.distribute_threshold = 0
+        while rt.kill_worker() is not None:
+            pass
+        deadline = time.perf_counter() + 10.0
+        while rt.workers_alive() > 0 and time.perf_counter() < deadline:
+            time.sleep(0.05)
+        out_a = out.copy()
+        ck.call_variant("np", snap, train, steer, out_a, gates, k, dof,
+                        iters, ALPHA, LOADING)
+        err = float(abs(out_a - out_ref).max())
+        assert err < 1e-8, f"degraded STAP mismatch: {err:.2e}"
+        st = rt.stats()
+        degraded = (st["faults"].get("degraded_local_runs", 0)
+                    + st["faults"].get("degraded_chunks", 0))
+        assert degraded >= 1, st["faults"]
+        degrade = {"max_abs_err": err, "faults": st["faults"]}
+        events += list(rt.fault_events)
+    finally:
+        rt.shutdown()
+
+    doc = {"workload": "stap_adaptive_chaos",
+           "shape": {"gates": gates, "k_train": k, "dof": dof,
+                     "iters": iters}, "smoke": smoke,
+           "serving_loop": serving, "degrade_drill": degrade,
+           "events": events}
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"stap_chaos.serving,calls={calls},max_abs_err={err:.2e},"
+          f"deaths={serving['worker_deaths']},"
+          f"respawns={serving['faults'].get('respawns', 0)},"
+          f"delayed_msgs={serving['chaos']['delayed']}", flush=True)
+    print(f"stap_chaos.rebalance,{serving['chunks_executed_by_worker']}",
+          flush=True)
+    print(f"stap_chaos.degrade,"
+          f"local_runs={degrade['faults'].get('degraded_local_runs', 0)},"
+          f"degraded_chunks={degrade['faults'].get('degraded_chunks', 0)}",
+          flush=True)
+    print(f"stap_chaos.written,{out_path}", flush=True)
+    return doc
+
+
 def main():
     import sys
 
     if "--hetero" in sys.argv:
         run_hetero(smoke="--smoke" in sys.argv)
+    elif "--chaos" in sys.argv:
+        run_chaos(smoke="--smoke" in sys.argv)
     elif "--distrib" in sys.argv:
         run_distrib(smoke="--smoke" in sys.argv)
     else:

@@ -29,7 +29,12 @@ see ``repro.distrib.device``): codegen's jnp twin of the gate-loop body
 routes to it while the np body runs on the CPU workers — the paper's
 CPU-vs-GPU code-variant selection, fleetwide, gathered into one result.
 
-    PYTHONPATH=src python examples/stap.py [workers] [--hetero]
+With ``--tcp`` the fleet rides the authenticated socket transport
+instead of inherited pipes — the same path remote workers use to join
+(``python -m repro.distrib.worker --connect HOST:PORT --authkey HEX``) —
+and the mid-run kill drill exercises reconnect grace + respawn over it.
+
+    PYTHONPATH=src python examples/stap.py [workers] [--hetero] [--tcp]
 """
 
 import sys
@@ -95,7 +100,8 @@ def make_stap_data(gates: int = GATES, k: int = K_TRAIN, dof: int = DOF,
     return snap, train, steer, out
 
 
-def main(workers: int = 2, hetero: bool = False) -> None:
+def main(workers: int = 2, hetero: bool = False,
+         tcp: bool = False) -> None:
     snap, train, steer, out = make_stap_data()
 
     out_ref = out.copy()
@@ -111,8 +117,17 @@ def main(workers: int = 2, hetero: bool = False) -> None:
     if hetero and workers < 2:
         sys.exit("--hetero needs >= 2 workers (one CPU + one GPU poser)")
     sim_gpus = (workers - 1,) if hetero else ()
-    rt = ClusterRuntime(workers=workers, sim_gpu_workers=sim_gpus)
+    rt = ClusterRuntime(workers=workers, sim_gpu_workers=sim_gpus,
+                        transport="tcp" if tcp else "pipe",
+                        hb_interval_s=0.5 if tcp else 1.0,
+                        reconnect_grace_s=1.0)
     try:
+        if tcp:
+            host, port = rt.address
+            print(f"[stap] tcp transport on {host}:{port} — external "
+                  f"workers join with: python -m repro.distrib.worker "
+                  f"--connect {host}:{port} "
+                  f"--authkey {rt.listener.authkey.hex()}")
         profs = [(p.wid, p.gflops, p.transport_mbs,
                   f"gpu:{p.gpu_kind}@{p.gpu_gflops}" if p.has_gpu
                   else "cpu")
@@ -173,6 +188,7 @@ def main(workers: int = 2, hetero: bool = False) -> None:
 
 
 if __name__ == "__main__":
-    args = [a for a in sys.argv[1:] if a != "--hetero"]
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
     main(int(args[0]) if args else 2,
-         hetero="--hetero" in sys.argv)
+         hetero="--hetero" in sys.argv,
+         tcp="--tcp" in sys.argv)

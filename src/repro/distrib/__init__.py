@@ -4,8 +4,12 @@ raylite (:mod:`repro.runtime`) models a cluster with threads inside one
 process; this package crosses real OS-process boundaries:
 
   * a **head** scheduler (:class:`ClusterRuntime`) spawns worker
-    *processes* and talks to them over pipes (``multiprocessing``
-    transport — same framing a socket transport would use);
+    *processes* and talks to them over pipes or — with
+    ``transport="tcp"`` — authenticated sockets workers can join from
+    any host (:mod:`.transport`: authkey handshake + rotation,
+    reconnect with exponential backoff, heartbeats, elastic
+    join/drain); :mod:`.chaos` injects deterministic faults into all
+    of it;
   * each worker measures a **device profile** at startup (CPU count,
     memory, matmul GFLOP/s, memory bandwidth, GPU presence) that feeds a
     **placement-aware scheduler** with data-locality affinity;
@@ -24,6 +28,7 @@ process; this package crosses real OS-process boundaries:
     rt.get(ref)
 """
 
+from .chaos import ChaosPlan, ChaosWire
 from .cluster import ClusterRuntime, ClusterTaskError
 from .device import DeviceProfile, measure_profile
 from .objects import ClusterRef, ObjectMeta, ObjectPlane, TaskSpec
@@ -31,11 +36,15 @@ from .placement import PlacementScheduler, PlacementWeights, WorkerView
 from .serial import (ChunkSlice, ClosureParts, assemble_fn, dumps_fn,
                      loads_fn, payload_split_nbytes, rebase_chunk,
                      split_fn)
+from .transport import (HeadListener, PipeLink, ReconnectingClient,
+                        WorkerFencedError, new_authkey)
 
 __all__ = [
-    "ChunkSlice", "ClosureParts", "ClusterRuntime", "ClusterTaskError",
-    "ClusterRef", "DeviceProfile", "ObjectMeta", "ObjectPlane",
-    "PlacementScheduler", "PlacementWeights", "TaskSpec", "WorkerView",
-    "assemble_fn", "dumps_fn", "loads_fn", "measure_profile",
+    "ChaosPlan", "ChaosWire", "ChunkSlice", "ClosureParts",
+    "ClusterRuntime", "ClusterTaskError", "ClusterRef", "DeviceProfile",
+    "HeadListener", "ObjectMeta", "ObjectPlane", "PipeLink",
+    "PlacementScheduler", "PlacementWeights", "ReconnectingClient",
+    "TaskSpec", "WorkerFencedError", "WorkerView", "assemble_fn",
+    "dumps_fn", "loads_fn", "measure_profile", "new_authkey",
     "payload_split_nbytes", "rebase_chunk", "split_fn",
 ]

@@ -30,6 +30,7 @@ runtime crosses process boundaries:
 from __future__ import annotations
 
 import itertools
+import logging
 import multiprocessing as mp
 import os
 import signal
@@ -42,12 +43,21 @@ import numpy as np
 
 from repro import obs
 
+from .chaos import ChaosPlan, ChaosWire
 from .device import DeviceProfile, measure_profile, sim_gpu_for
 from .objects import (HEAD, LOST, REMOTE, ClusterRef, ObjectPlane,
                       TaskSpec)
 from .placement import PlacementScheduler, PlacementWeights, WorkerView
 from .serial import (ClosureParts, closure_arrays, dumps_fn,
                      split_fn_variants)
+from .transport import HeadListener
+
+log = logging.getLogger("repro.distrib")
+
+# worker errors carrying this marker mean "I don't hold that body blob"
+# (a dropped/evicted blob message): the head resets its shipped-state
+# bookkeeping for the worker so the resubmit re-ships in full
+BLOB_MISSING = "blob-missing"
 
 
 class ClusterTaskError(RuntimeError):
@@ -64,6 +74,10 @@ class _BlobRec:
     bid: int
     key: tuple
     seq: int = 0
+    # latest ClosureParts seen for this identity, kept so a joining or
+    # respawned worker can be pre-warmed with the serving loop's hot
+    # bodies (bounded by the blob cache's LRU cap)
+    parts: Optional[ClosureParts] = None
 
 
 @dataclass
@@ -88,13 +102,19 @@ class _TaskState:
     # the base args stamped onto this chunk's worker-side spans
     token: Any = None
     span_meta: Optional[Dict[str, Any]] = None
+    # active liveness: optional wall deadline for each dispatch of this
+    # task, monotonic stamp of the last dispatch, and the wids that have
+    # already run (or hung on) it — deadline expiry resubmits elsewhere
+    deadline_s: Optional[float] = None
+    dispatched_at: Optional[float] = None
+    tried: List[int] = field(default_factory=list)
 
 
 class _WorkerHandle:
     def __init__(self, wid: int, proc, conn, sim_gpu: bool = False):
         self.wid = wid
-        self.proc = proc
-        self.conn = conn
+        self.proc = proc          # None for externally-joined workers
+        self.conn = conn          # None while a TCP worker is attaching
         self.sim_gpu = sim_gpu   # respawns inherit the GPU pose
         self.profile: Optional[DeviceProfile] = None
         self.hello = threading.Event()
@@ -104,6 +124,15 @@ class _WorkerHandle:
         self.clock_offset: Optional[float] = None
         self.alive = True
         self.draining = False   # clean scale-down, not a failure
+        self.drain_sent = False  # monitor sent the drain-shutdown once
+        # liveness bookkeeping: monotonic stamp of the last message seen
+        # from this worker (any kind — a busy worker's "done" counts as
+        # proof of life), and — TCP only — the monotonic instant at
+        # which a lost connection stops being "suspect, may reconnect"
+        # and becomes a death
+        self.last_msg = time.monotonic()
+        self.suspect_deadline: Optional[float] = None
+        self.no_grace = False   # heartbeat expiry: skip reconnect grace
         self.inflight: set = set()
         self.blobs: set = set()                    # bids with skeleton
         self.blob_cells: Dict[int, Dict[str, str]] = {}  # bid→cell→hash
@@ -122,6 +151,8 @@ class _WorkerHandle:
 
     def send(self, msg) -> None:
         with self.send_lock:
+            if self.conn is None:
+                raise OSError(f"worker {self.wid} not attached")
             try:
                 self.conn.send(msg)
             except TypeError as exc:
@@ -134,13 +165,25 @@ class _WorkerHandle:
                 raise OSError(f"connection closed under send: {exc}")
 
     def close_conn(self) -> None:
-        """Close the pipe without racing an in-flight :meth:`send` (the
+        """Close the link without racing an in-flight :meth:`send` (the
         lock serializes us behind it; later sends fail cleanly)."""
         with self.send_lock:
+            if self.conn is None:
+                return
             try:
                 self.conn.close()
             except OSError:
                 pass
+            self.conn = None
+
+    def forget_blobs(self) -> None:
+        """Reset the shipped-state bookkeeping — the worker told us it
+        does not hold a blob we think it has (a chaos-dropped blob
+        message, or a reconnect after a worker-side restart). The next
+        :meth:`ship_blob` re-sends skeleton + every cell."""
+        with self.send_lock:
+            self.blobs.clear()
+            self.blob_cells.clear()
 
     def ship_blob(self, bid: int, parts: ClosureParts) -> "Tuple[int, int]":
         """Bring this worker's cached copy of blob ``bid`` up to date:
@@ -157,6 +200,8 @@ class _WorkerHandle:
                      if shipped.get(nm) != parts.cell_hashes[nm]}
             if not need_skel and not delta:
                 return 0, 0
+            if self.conn is None:
+                raise OSError(f"worker {self.wid} not attached")
             skel = parts.skeleton if need_skel else None
             self.conn.send(("blob", bid, skel, delta))
             self.blobs.add(bid)
@@ -198,7 +243,17 @@ class ClusterRuntime:
                  weights: PlacementWeights = PlacementWeights(),
                  hello_timeout_s: float = 30.0,
                  sim_gpu_workers: Sequence[int] = (),
-                 trace=None):
+                 trace=None,
+                 transport: str = "pipe",
+                 address: Tuple[str, int] = ("127.0.0.1", 0),
+                 authkey: Optional[bytes] = None,
+                 hb_interval_s: float = 1.0,
+                 hb_miss_budget: int = 15,
+                 reconnect_grace_s: float = 3.0,
+                 task_deadline_s: Optional[float] = None,
+                 quorum: int = 1,
+                 degrade_local: bool = True,
+                 chaos: Optional[ChaosPlan] = None):
         if start_method is None:
             # GPU-capable workers (real or posing) may execute jnp twin
             # bodies, and XLA does not survive a fork of a head that has
@@ -218,6 +273,22 @@ class ClusterRuntime:
         self.start_method = start_method
         self.max_attempts = max_attempts
         self.respawn = respawn
+        if transport not in ("pipe", "tcp"):
+            raise ValueError(f"unknown transport {transport!r}")
+        self.transport = transport
+        self.hb_interval_s = hb_interval_s
+        self.hb_miss_budget = hb_miss_budget
+        self.reconnect_grace_s = reconnect_grace_s
+        self.task_deadline_s = task_deadline_s
+        self.quorum = max(1, quorum)
+        self.degrade_local = degrade_local
+        self.chaos = chaos
+        self.listener: Optional[HeadListener] = None
+        self.address: Optional[Tuple[str, int]] = None
+        # bounded journal of fault events (death/respawn/rejoin/replay/
+        # degrade…) for the chaos-drill artifact beside BENCH_distrib
+        self.fault_events: List[Dict[str, Any]] = []
+        self._fenced_wids: set = set()
         self.plane = ObjectPlane()
         self.scheduler = PlacementScheduler(weights)
         self._lock = threading.Lock()
@@ -248,6 +319,9 @@ class ClusterRuntime:
         # must exist before the zeroing assignments below
         self._mscope = obs.metrics.unique_scope("cluster")
         self._phase = self._mscope.sub("phase")
+        # fault-event counters (cluster#N.faults.*): every recovery path
+        # increments here so drills/CI can assert "recovery happened"
+        self._faults = self._mscope.sub("faults")
         self._round_seq = itertools.count()
         self._round_busy: Dict[int, float] = {}     # round → worker-busy s
         self._round_compute: Dict[int, float] = {}  # round → Σ run-span s
@@ -267,6 +341,11 @@ class ClusterRuntime:
         self.cpu_chunks = 0            # chunks dispatched on the np body
         self.unit_backend = self._mscope.dictmetric("unit_backend")
         self.chunks_executed = self._mscope.dictmetric("chunks_executed")
+        # rebalance visibility: chunks confirmed executed per worker id —
+        # a mid-loop join shows up as a new key accumulating its
+        # capability-proportional share
+        self.chunks_executed_by_worker = \
+            self._mscope.dictmetric("chunks_executed_by_worker")
         # data-movement telemetry (chunk slicing + blob cache)
         self.sliced_args = 0           # array args shipped as row slices
         self.bytes_saved_sliced = 0    # vs shipping each chunk the whole
@@ -280,14 +359,33 @@ class ClusterRuntime:
         if cache_dir is not None:
             from repro.profiler.cache import VariantCache
             self.variant_cache = VariantCache(cache_dir)
+        if transport == "tcp":
+            self.listener = HeadListener(address, authkey=authkey)
+            self.address = self.listener.address
+            threading.Thread(target=self._accept_loop,
+                             name="cluster-accept", daemon=True).start()
         sim_set = set(sim_gpu_workers)
         for i in range(workers):
             self._spawn_worker(sim_gpu=i in sim_set)
         self._await_hellos(hello_timeout_s)
         self._reprofile_sequentially()
         self._measure_transport()
+        # liveness + deadline monitor (no-op work on an idle pipe fleet)
+        threading.Thread(target=self._monitor_loop,
+                         name="cluster-monitor", daemon=True).start()
 
     # -- worker lifecycle -------------------------------------------------
+    def _fault_event(self, kind: str, **detail) -> None:
+        """Count one fault/recovery event (``cluster#N.faults.<kind>``)
+        and journal it (bounded) for the chaos-drill artifact."""
+        self._faults.inc(kind, 1)
+        ev = {"t": time.monotonic(), "kind": kind}
+        ev.update(detail)
+        with self._lock:
+            self.fault_events.append(ev)
+            if len(self.fault_events) > 4096:
+                del self.fault_events[:2048]
+
     def _spawn_worker(self, sim_gpu: bool = False) -> _WorkerHandle:
         from .worker import worker_main
         wid = next(self._wids)
@@ -295,20 +393,134 @@ class ClusterRuntime:
         # gets a fresh wid that would no longer match the env wid list,
         # and the replacement must inherit its predecessor's pose
         sim_gpu = sim_gpu or sim_gpu_for(wid)
-        head_conn, worker_conn = self._ctx.Pipe(duplex=True)
-        proc = self._ctx.Process(target=worker_main,
-                                 args=(worker_conn, wid, sim_gpu),
-                                 name=f"cluster-worker-{wid}",
-                                 daemon=True)
+        if self.transport == "tcp":
+            # the child dials back in over the socket; its handle has no
+            # conn until the accept loop attaches it
+            endpoint = ("tcp", self.address, self.listener.authkey)
+            head_conn = None
+        else:
+            head_conn, worker_conn = self._ctx.Pipe(duplex=True)
+            endpoint = worker_conn
+        proc = self._ctx.Process(
+            target=worker_main,
+            args=(endpoint, wid, sim_gpu, self.hb_interval_s),
+            name=f"cluster-worker-{wid}", daemon=True)
         proc.start()
-        worker_conn.close()  # child's end lives in the child now
+        if self.transport != "tcp":
+            worker_conn.close()  # child's end lives in the child now
+            head_conn = self._wrap_chaos(head_conn, wid)
         wh = _WorkerHandle(wid, proc, head_conn, sim_gpu=sim_gpu)
         with self._lock:
             self._handles[wid] = wh
-        t = threading.Thread(target=self._recv_loop, args=(wh,),
-                             name=f"cluster-recv-{wid}", daemon=True)
-        t.start()
+        if self.transport == "tcp":
+            # give the dial-in the same grace a reconnect would get
+            wh.suspect_deadline = time.monotonic() + max(
+                self.reconnect_grace_s, 10.0)
+        else:
+            t = threading.Thread(target=self._recv_loop, args=(wh, head_conn),
+                                 name=f"cluster-recv-{wid}", daemon=True)
+            t.start()
         return wh
+
+    def _wrap_chaos(self, conn, wid: int):
+        if self.chaos is not None:
+            return ChaosWire(conn, self.chaos, peer=wid)
+        return conn
+
+    def _attach_conn(self, wh: _WorkerHandle, conn,
+                     rejoin: bool = False) -> None:
+        """Bind an authenticated TCP connection to a worker handle and
+        start its receiver. The welcome goes out before the handle sees
+        the conn, so it is guaranteed to be the first head→worker
+        message on the wire."""
+        conn.send(("welcome", wh.wid))
+        wire = self._wrap_chaos(conn, wh.wid)
+        with wh.send_lock:
+            old = wh.conn
+            wh.conn = wire
+        if old is not None:
+            try:
+                old.close()
+            except OSError:
+                pass
+        with self._lock:
+            wh.last_msg = time.monotonic()
+            wh.suspect_deadline = None
+        if rejoin:
+            self._fault_event("rejoins", wid=wh.wid)
+        threading.Thread(target=self._recv_loop, args=(wh, wire),
+                         name=f"cluster-recv-{wh.wid}",
+                         daemon=True).start()
+
+    def _accept_loop(self) -> None:
+        """TCP transport: authenticate and route every inbound
+        connection — spawned workers attaching/reattaching under a known
+        wid, or external workers joining for a fresh one."""
+        while not self._shutdown:
+            try:
+                conn = self.listener.accept()
+            except OSError:
+                if self._shutdown:
+                    return
+                continue
+            except Exception:
+                # failed auth (counted by the listener) or a garbled
+                # handshake — never the accept thread's death
+                self._fault_event("auth_failures")
+                continue
+            try:
+                if not conn.poll(10.0):
+                    conn.close()
+                    continue
+                msg = conn.recv()
+            except (EOFError, OSError):
+                continue
+            try:
+                self._route_attach(conn, msg)
+            except (EOFError, OSError):
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+
+    def _route_attach(self, conn, msg) -> None:
+        kind = msg[0]
+        if kind == "attach":
+            wid = int(msg[1])
+            attempts = int(msg[2]) if len(msg) > 2 else 0
+            chaos = self.chaos
+            with self._lock:
+                wh = self._handles.get(wid)
+                # a re-attach is any attach from a worker that already
+                # completed its hello (a clean socket drop re-dials with
+                # zero *failed* attempts, but it is still a rejoin)
+                rejoin = (wh is not None
+                          and (attempts > 0 or wh.hello.is_set()))
+                fenced = (wid in self._fenced_wids
+                          or (chaos is not None and rejoin
+                              and wid in chaos.refuse_rejoin))
+            if wh is None or not wh.alive or fenced:
+                self._fault_event("fenced", wid=wid)
+                conn.send(("denied", f"worker {wid} is fenced"))
+                conn.close()
+                return
+            if attempts > 0:
+                self._faults.inc("reconnect_attempts", attempts)
+            self._attach_conn(wh, conn, rejoin=rejoin)
+        elif kind == "join":
+            sim_gpu = bool(msg[1]) if len(msg) > 1 else False
+            wh = _WorkerHandle(next(self._wids), None, None,
+                               sim_gpu=sim_gpu)
+            with self._lock:
+                self._handles[wh.wid] = wh
+            self._attach_conn(wh, conn)
+            self._fault_event("joins", wid=wh.wid)
+            # capability + transport measurement happen on the caller's
+            # add-worker path (or lazily via the hello profile for a
+            # worker that joined on its own)
+        else:
+            conn.send(("denied", f"bad handshake {msg!r}"))
+            conn.close()
 
     def _await_hellos(self, timeout_s: float) -> None:
         deadline = time.monotonic() + timeout_s
@@ -361,10 +573,10 @@ class ClusterRuntime:
             wh.profile.transport_mbs = round(nbytes / dt / 1e6, 1)
         self._pongs.pop(wh.wid, None)
 
-    def _recv_loop(self, wh: _WorkerHandle) -> None:
+    def _recv_loop(self, wh: _WorkerHandle, conn) -> None:
         while True:
             try:
-                msg = wh.conn.recv()
+                msg = conn.recv()
             except (EOFError, OSError):
                 break
             except Exception:
@@ -373,14 +585,49 @@ class ClusterRuntime:
                 # is unusable — treat it as the worker's death, never as
                 # a reason to crash the receiver thread
                 break
+            wh.last_msg = time.monotonic()
             try:
                 self._handle(wh, msg)
             except Exception:
-                pass  # a malformed message must not kill the receiver
+                # a malformed message must not kill the receiver — but
+                # protocol corruption has to be visible, not swallowed
+                self._faults.inc("malformed_msgs", 1)
+                log.warning("malformed message from worker %d: %.120r",
+                            wh.wid, msg)
+        self._on_conn_lost(wh, conn)
+
+    def _on_conn_lost(self, wh: _WorkerHandle, conn) -> None:
+        """One receiver's connection died. On the pipe transport (or at
+        shutdown/drain) that *is* the worker's death; on TCP the worker
+        gets a reconnect grace window and becomes *suspect* — the
+        monitor declares death only if the grace expires un-reattached."""
+        with self._lock:
+            stale = wh.conn is not None and wh.conn is not conn
+        if stale:
+            return   # a reattach already replaced this conn; old thread
+        if (self.transport == "tcp" and not self._shutdown
+                and not wh.draining and not wh.no_grace and wh.alive):
+            with wh.send_lock:
+                if wh.conn is conn:
+                    wh.conn = None
+            try:
+                conn.close()
+            except OSError:
+                pass
+            with self._lock:
+                if wh.suspect_deadline is None:
+                    wh.suspect_deadline = (time.monotonic()
+                                           + self.reconnect_grace_s)
+            self._fault_event("conn_lost", wid=wh.wid)
+            return
         self._on_worker_death(wh)
 
     def _handle(self, wh: _WorkerHandle, msg) -> None:
         kind = msg[0]
+        if kind == "hb":
+            if len(msg) > 1:
+                wh.note_clock(msg[1])
+            return   # last_msg already stamped by the recv loop
         if kind == "hello":
             wh.profile = DeviceProfile.from_dict(msg[1])
             if len(msg) > 2:
@@ -390,16 +637,24 @@ class ClusterRuntime:
             _, tid, oid, nbytes, payload = msg[:5]
             ran = msg[5] if len(msg) > 5 else None
             wspans = msg[6] if len(msg) > 6 else None
-            if ran is not None:
-                # what actually *executed* (vs the dispatch-intent
-                # gpu_chunks/cpu_chunks counters, which a mid-flight
-                # backend downgrade can overtake)
-                with self._lock:
-                    self.chunks_executed[ran] = \
-                        self.chunks_executed.get(ran, 0) + 1
             with self._lock:
                 ts = self._tasks.get(tid)
                 wh.inflight.discard(tid)
+                # drop duplicates: a chaos-duplicated "done", or a slow
+                # worker completing a task a deadline already resubmitted
+                # elsewhere — counting (or fulfilling) twice would skew
+                # telemetry and resurrect released objects
+                if (ts is not None and ts.finished) \
+                        or not self.plane.contains(oid):
+                    return
+                if ran is not None:
+                    # what actually *executed* (vs the dispatch-intent
+                    # gpu_chunks/cpu_chunks counters, which a mid-flight
+                    # backend downgrade can overtake)
+                    self.chunks_executed[ran] = \
+                        self.chunks_executed.get(ran, 0) + 1
+                    self.chunks_executed_by_worker[wh.wid] = \
+                        self.chunks_executed_by_worker.get(wh.wid, 0) + 1
             if wspans and ts is not None and self.trace:
                 # worker spans land *before* the result fulfills, so a
                 # gather that returns has this chunk's busy seconds
@@ -422,12 +677,19 @@ class ClusterRuntime:
             with self._lock:
                 ts = self._tasks.get(tid)
                 wh.inflight.discard(tid)
-            if ts is None:
+            if BLOB_MISSING in (message or ""):
+                # the worker lacks a body blob we believe it holds (a
+                # dropped/evicted blob message): reset its shipped-state
+                # so the retry re-ships skeleton + cells in full
+                wh.forget_blobs()
+                self._fault_event("blob_missing", wid=wh.wid, task=tid)
+            if ts is None or ts.finished:
                 return
             ts.spec.attempts += 1
             if ts.spec.attempts < self.max_attempts and not self._shutdown:
                 self._maybe_downgrade_backend(ts.spec)
                 self.resubmits += 1
+                self._fault_event("retries", task=tid, wid=wh.wid)
                 threading.Thread(target=self._dispatch, args=(ts,),
                                  daemon=True).start()
             else:
@@ -495,19 +757,32 @@ class ClusterRuntime:
             inflight = list(wh.inflight)
             wh.inflight.clear()
             clean = self._shutdown or wh.draining
+            self._fenced_wids.add(wh.wid)   # a dead wid never reattaches
         wh.close_conn()
         if clean:
+            if wh.draining and not self._shutdown:
+                # a drained worker may still own objects nobody fetched:
+                # mark them LOST so lineage replays them on demand (the
+                # monitor tries to pull them to the head *before* the
+                # drain completes, making this the uncommon path)
+                self.plane.mark_worker_lost(wh.wid)
+                self._fault_event("drains", wid=wh.wid)
             return
         self.worker_deaths += 1
+        self._fault_event("worker_deaths", wid=wh.wid)
         self.plane.mark_worker_lost(wh.wid)
-        if self.respawn:
-            nw = self._spawn_worker(sim_gpu=wh.sim_gpu)
-            if nw.hello.wait(10.0):
-                # the boot-time probe may have contended with whatever
-                # killed its predecessor: re-measure like at startup so
-                # chunk weights and profitability stay honest
-                self._reprofile(nw)
-                self._ping_transport(nw)
+        if self.respawn and wh.proc is not None:
+            with obs.span("respawn", cat="fault", wid=wh.wid):
+                nw = self._spawn_worker(sim_gpu=wh.sim_gpu)
+                if nw.hello.wait(10.0):
+                    # the boot-time probe may have contended with
+                    # whatever killed its predecessor: re-measure like
+                    # at startup so chunk weights and profitability
+                    # stay honest
+                    self._reprofile(nw)
+                    self._ping_transport(nw)
+                    self._prewarm_blobs(nw)
+            self._fault_event("respawns", wid=nw.wid, replaced=wh.wid)
         # in-flight tasks died with the process: resubmit on survivors
         for tid in inflight:
             with self._lock:
@@ -527,6 +802,119 @@ class ClusterRuntime:
             threading.Thread(target=self._dispatch, args=(ts,),
                              daemon=True).start()
 
+    # -- active liveness ---------------------------------------------------
+    def _monitor_loop(self) -> None:
+        """Periodic liveness sweep: reap suspects whose reconnect grace
+        expired, declare heartbeat-silent workers dead, complete clean
+        drains, and enforce per-task deadlines. Replaces the passive
+        "recv failed ⇒ dead" model with an active one."""
+        while not self._shutdown:
+            time.sleep(0.1)
+            if self._shutdown:
+                return
+            now = time.monotonic()
+            with self._lock:
+                handles = list(self._handles.values())
+            hb_limit = (self.hb_interval_s * self.hb_miss_budget
+                        if self.hb_interval_s > 0 else None)
+            for wh in handles:
+                if not wh.alive or self._shutdown:
+                    continue
+                if wh.suspect_deadline is not None:
+                    if now > wh.suspect_deadline:
+                        self._fault_event("reconnect_grace_expired",
+                                          wid=wh.wid)
+                        self._on_worker_death(wh)
+                    continue
+                if (hb_limit is not None and wh.conn is not None
+                        and not wh.draining and wh.hello.is_set()
+                        and now - wh.last_msg > hb_limit):
+                    # silent past the miss budget: treat as dead even
+                    # though the socket looks healthy (hung process) —
+                    # no reconnect grace, its state is not trustworthy
+                    wh.no_grace = True
+                    self._fault_event("hb_expired", wid=wh.wid,
+                                      age_s=round(now - wh.last_msg, 3))
+                    # declare death here rather than via the recv loop:
+                    # closing the fd does not wake a thread blocked in
+                    # read() on it, and a hung-but-silent worker sends
+                    # nothing that would (_on_worker_death is idempotent,
+                    # so the receiver's eventual exit is a no-op)
+                    wh.close_conn()
+                    self._on_worker_death(wh)
+                    continue
+                if wh.draining and not wh.inflight and not wh.drain_sent:
+                    wh.drain_sent = True
+                    # pull its objects home while it is still live so
+                    # the drain loses nothing (anything missed goes
+                    # LOST and replays via lineage)
+                    for oid in list(self.plane.resident_on(wh.wid)):
+                        self._fetch(oid)
+                    try:
+                        wh.send(("shutdown",))
+                    except OSError:
+                        pass
+            self._check_deadlines(now)
+
+    def _forensic(self, ts: _TaskState) -> str:
+        """One task's timeout forensics: id, attempt count, placement,
+        and how stale its worker's last heartbeat is."""
+        wid = ts.wid
+        wh = self._handle_for(wid) if wid is not None else None
+        if wh is not None:
+            age = f"last heartbeat {time.monotonic() - wh.last_msg:.2f}s ago"
+        elif wid is not None:
+            age = "worker gone"
+        else:
+            age = "never dispatched"
+        return (f"task {ts.spec.task_id} (kind={ts.spec.kind}, "
+                f"attempt {ts.spec.attempts + 1}/{self.max_attempts}, "
+                f"worker {wid}, {age})")
+
+    def _timeout_forensics(self, ref: ClusterRef) -> str:
+        with self._lock:
+            tid = self._producer.get(ref.oid)
+            ts = self._tasks.get(tid) if tid is not None else None
+        if ts is None:
+            return f"timed out waiting for {ref}"
+        return f"timed out waiting for {ref}: {self._forensic(ts)}"
+
+    def _check_deadlines(self, now: float) -> None:
+        with self._lock:
+            expired = []
+            for ts in self._tasks.values():
+                dl = (ts.deadline_s if ts.deadline_s is not None
+                      else self.task_deadline_s)
+                if dl is None or ts.finished or ts.dispatched_at is None:
+                    continue
+                if now - ts.dispatched_at > dl:
+                    # claim this expiry (one per dispatch; _dispatch
+                    # re-stamps on the resubmit). The hung worker keeps
+                    # the tid in its inflight set on purpose: the load
+                    # penalty steers placement away from it.
+                    ts.dispatched_at = None
+                    expired.append((ts, dl))
+        for ts, dl in expired:
+            forensic = self._forensic(ts)
+            self._fault_event("deadline_expired", task=ts.spec.task_id,
+                              wid=ts.wid, deadline_s=dl)
+            log.warning("deadline expired: %s", forensic)
+            ts.spec.attempts += 1
+            if ts.spec.attempts < self.max_attempts and not self._shutdown:
+                self.resubmits += 1
+                self._fault_event("retries", task=ts.spec.task_id,
+                                  wid=ts.wid)
+                threading.Thread(target=self._dispatch, args=(ts,),
+                                 daemon=True).start()
+            else:
+                ts.error = (f"missed its {dl}s deadline and exhausted "
+                            f"the retry budget: {forensic}")
+                obs.end(ts.token, error=True)
+                self.plane.fulfill_inline(ts.spec.out.oid,
+                                          _TaskErr(ts.error))
+                ts.finished = True
+                ts.event.set()
+
     @staticmethod
     def _maybe_downgrade_backend(spec: TaskSpec) -> None:
         """A chunk that *errored* on a worker retries on the np fallback
@@ -542,7 +930,9 @@ class ClusterRuntime:
     def _views(self) -> List[WorkerView]:
         with self._lock:
             handles = [wh for wh in self._handles.values()
-                       if wh.alive and wh.profile is not None]
+                       if wh.alive and wh.profile is not None
+                       and not wh.draining and wh.conn is not None
+                       and wh.suspect_deadline is None]
             return [WorkerView(wh.wid, wh.profile, len(wh.inflight),
                                self.plane.resident_on(wh.wid))
                     for wh in handles]
@@ -562,7 +952,9 @@ class ClusterRuntime:
                 self._replay(ref.oid)
             self.plane.wait_ready(ref.oid, 0.05)
             if deadline is not None and time.monotonic() > deadline:
-                raise TimeoutError(f"arg {ref} never became ready")
+                raise TimeoutError(
+                    f"arg never became ready: "
+                    f"{self._timeout_forensics(ref)}")
 
     def _dispatch(self, ts: _TaskState) -> None:
         """Place and send one task; blocks until its ref args are ready
@@ -602,6 +994,12 @@ class ClusterRuntime:
                     return
                 time.sleep(0.05)
                 continue
+            if ts.tried:
+                # a retry (error, death, or expired deadline) prefers a
+                # worker that has not already failed/hung on this task
+                fresh = [v for v in views if v.wid not in ts.tried]
+                if fresh:
+                    views = fresh
             arg_bytes = {a.oid: self.plane.meta(a.oid).nbytes
                          for a in spec.args
                          if isinstance(a, ClusterRef)}
@@ -614,7 +1012,10 @@ class ClusterRuntime:
                 with self._lock:
                     wh.inflight.add(spec.task_id)
                 ts.wid = wid
+                if wid not in ts.tried:
+                    ts.tried.append(wid)
                 wh.send(("task", spec.task_id, wire))
+                ts.dispatched_at = time.monotonic()
                 if spec.kind == "chunk":
                     self._count_chunk_shipment(spec)
                 return
@@ -741,11 +1142,16 @@ class ClusterRuntime:
                 self._replay(ref.oid)
             self.plane.wait_ready(ref.oid, 0.05)
             if deadline is not None and time.monotonic() > deadline:
-                raise TimeoutError(f"timed out waiting for {ref}")
+                raise TimeoutError(self._timeout_forensics(ref))
 
     def wait(self, refs: Sequence[ClusterRef], num_returns: int = 1,
-             timeout: Optional[float] = None):
-        """ray.wait analogue: (ready, pending)."""
+             timeout: Optional[float] = None,
+             on_timeout: str = "return"):
+        """ray.wait analogue: (ready, pending). With
+        ``on_timeout="raise"``, a timeout raises :class:`TimeoutError`
+        naming every still-pending task, its placed worker, and how
+        stale that worker's last heartbeat is (the default keeps ray's
+        return-what-you-have contract)."""
         deadline = None if timeout is None else time.monotonic() + timeout
         ready, pending = [], list(refs)
         while len(ready) < num_returns and pending:
@@ -756,6 +1162,12 @@ class ClusterRuntime:
             if len(ready) >= num_returns:
                 break
             if deadline is not None and time.monotonic() > deadline:
+                if on_timeout == "raise" and len(ready) < num_returns:
+                    detail = "; ".join(self._timeout_forensics(r)
+                                       for r in pending)
+                    raise TimeoutError(
+                        f"wait: {len(ready)}/{num_returns} ready after "
+                        f"{timeout}s — pending: {detail}")
                 break
             time.sleep(0.005)
         return ready, pending
@@ -802,9 +1214,13 @@ class ClusterRuntime:
         if not self.plane.try_reset_lost(oid):
             return  # someone else already replayed it
         self.replays += 1
+        self._fault_event("lineage_replays", task=ts.spec.task_id,
+                          oid=oid)
         ts.finished = False
         ts.event = threading.Event()
-        self._dispatch(ts)
+        with obs.span("replay", cat="fault", task=ts.spec.task_id,
+                      oid=oid):
+            self._dispatch(ts)
 
     # -- pfor sharding (the repro.core.pfor protocol) ----------------------
     def _blob_for(self, parts: ClosureParts) -> int:
@@ -816,11 +1232,12 @@ class ClusterRuntime:
             rec = self._blob_cache.get(parts.blob_key)
             if rec is not None:
                 rec.seq = next(self._blob_seq)
+                rec.parts = parts   # freshest cells win the prewarm
                 self.blob_hits += 1
                 return rec.bid
             self.blob_misses += 1
             rec = _BlobRec(next(self._blob_ids), parts.blob_key,
-                           next(self._blob_seq))
+                           next(self._blob_seq), parts=parts)
             self._blob_cache[parts.blob_key] = rec
             evict = []
             while len(self._blob_cache) > self.max_cached_blobs:
@@ -843,7 +1260,7 @@ class ClusterRuntime:
             # task racing past an eviction still recovers — the worker
             # errors on the missing blob and the resubmit re-ships it)
             with wh.send_lock:
-                if bid not in wh.blobs:
+                if bid not in wh.blobs or wh.conn is None:
                     continue
                 try:
                     wh.conn.send(("unblob", bid))
@@ -851,6 +1268,21 @@ class ClusterRuntime:
                     pass
                 wh.blobs.discard(bid)
                 wh.blob_cells.pop(bid, None)
+
+    def _prewarm_blobs(self, wh: _WorkerHandle) -> None:
+        """Ship every cached persistent body (skeleton + cells) to a
+        worker that just joined or respawned, so its first serving-loop
+        chunk starts warm instead of paying the full broadcast."""
+        with self._lock:
+            recs = [r for r in self._blob_cache.values()
+                    if r.parts is not None]
+        for rec in recs:
+            try:
+                cells, nbytes = wh.ship_blob(rec.bid, rec.parts)
+                self.cells_shipped += cells
+                self.bytes_shipped += nbytes
+            except OSError:
+                return   # died/unattached mid-warm; dispatch recovers
 
     @staticmethod
     def _merge_updates(arrays: Dict[str, np.ndarray], updates,
@@ -874,11 +1306,24 @@ class ClusterRuntime:
                 idx = np.asarray(idx, dtype=np.int64) + spec.lo * stride
             arr[np.unravel_index(idx, arr.shape)] = vals
 
+    def _await_quorum(self, views: List[WorkerView],
+                      wait_s: float = 5.0) -> List[WorkerView]:
+        """Give a collapsing fleet a beat to respawn/rejoin before
+        declaring it below quorum."""
+        deadline = time.monotonic() + wait_s
+        while len(views) < self.quorum and time.monotonic() < deadline:
+            if not self.respawn and self.workers_alive() < self.quorum:
+                break   # nothing will replace the dead
+            time.sleep(0.05)
+            views = self._views()
+        return views
+
     def pfor_shards(self, body, lo: int, hi: int,
                     tile: Optional[int] = None,
                     written: Sequence[str] = (),
                     sliceable: Sequence[str] = (),
-                    est_flops: float = 0.0) -> None:
+                    est_flops: float = 0.0,
+                    deadline_s: Optional[float] = None) -> None:
         """Execute a generated pfor body across worker processes.
 
         The body skeleton + broadcast cells persist on the workers under
@@ -925,8 +1370,28 @@ class ClusterRuntime:
         parts_by = split_fn_variants(bodies, slice_names)
         t_split1 = time.perf_counter()
         views = self._views()
-        if not views:
-            raise ClusterTaskError("no live workers for pfor")
+        if len(views) < self.quorum:
+            views = self._await_quorum(views)
+        if len(views) < self.quorum or not views:
+            if not self.degrade_local:
+                raise ClusterTaskError(
+                    f"no quorum for pfor: {len(views)} live workers "
+                    f"< quorum {self.quorum}")
+            # fleet collapsed and nothing will replace it: degrade to
+            # local in-process execution — the body's closure holds the
+            # head's live arrays, so calling it directly is the
+            # single-process semantics of the same loop
+            self._fault_event("degraded_local_runs",
+                              name=body.__name__, lo=lo, hi=hi)
+            log.warning("pfor %s degraded to local execution "
+                        "(%d live workers < quorum %d)",
+                        body.__name__, len(views), self.quorum)
+            with obs.span("degraded_local", cat="fault",
+                          body=body.__name__):
+                body(lo, hi)
+            self.pfor_runs += 1
+            ph.add_time("round_s", time.perf_counter() - rt0)
+            return
         # price the (unit, backend, worker) cells: each view gets the
         # backend whose roofline+transport estimate is cheaper for its
         # expected share of the iteration space
@@ -999,7 +1464,7 @@ class ClusterRuntime:
                             gather=True, backend=bk, alt=alt,
                             device_pref=({"np": "cpu", "jnp": "gpu"}[bk]
                                          if hetero else ""))
-            ts = _TaskState(spec)
+            ts = _TaskState(spec, deadline_s=deadline_s)
             if tracing:
                 ts.span_meta = {"round": rid, "lo": r.start,
                                 "hi": r.stop}
@@ -1024,11 +1489,29 @@ class ClusterRuntime:
         self.pfor_runs += 1
         try:
             for ref, spec in chunks:
-                # no per-chunk timeout: a healthy chunk may legitimately
-                # compute for minutes; failures surface via worker-death
-                # resubmission (bounded by max_attempts) instead
+                # no per-chunk gather timeout: a healthy chunk may
+                # legitimately compute for minutes; hangs surface via
+                # heartbeat expiry or ``deadline_s`` resubmission, both
+                # bounded by max_attempts
                 g0 = time.perf_counter()
-                updates = self.get(ref, timeout=None)
+                try:
+                    updates = self.get(ref, timeout=None)
+                except ClusterTaskError:
+                    if not self.degrade_local:
+                        raise
+                    # this chunk terminally failed (retry budget spent,
+                    # or the fleet died under it): run it in-process —
+                    # the body's closure writes the head's live arrays
+                    # directly, so no merge is needed
+                    self._fault_event("degraded_chunks",
+                                      task=spec.task_id,
+                                      lo=spec.lo, hi=spec.hi)
+                    log.warning("pfor chunk [%d, %d) degraded to "
+                                "local execution", spec.lo, spec.hi)
+                    with obs.span("degraded_chunk", cat="fault",
+                                  task=spec.task_id):
+                        body(spec.lo, spec.hi)
+                    updates = None
                 g1 = time.perf_counter()
                 self._merge_updates(arrays, updates, spec)
                 g2 = time.perf_counter()
@@ -1116,7 +1599,8 @@ class ClusterRuntime:
         """SIGKILL a worker process (fault-injection drill). Lineage +
         resubmission recover its objects and in-flight tasks."""
         with self._lock:
-            live = [wh for wh in self._handles.values() if wh.alive]
+            live = [wh for wh in self._handles.values()
+                    if wh.alive and wh.proc is not None]
             if not live:
                 return None
             victim = live[0]
@@ -1131,21 +1615,75 @@ class ClusterRuntime:
             return None
         return victim.wid
 
-    def scale_to(self, n: int) -> None:
+    # -- elastic membership ------------------------------------------------
+    def add_worker(self, sim_gpu: bool = False,
+                   timeout_s: float = 30.0) -> Optional[int]:
+        """Grow the fleet by one mid-serving-loop: spawn, wait for its
+        hello, re-measure capability + transport, and pre-warm it with
+        the cached persistent bodies so the very next pfor round gives
+        it its capability-proportional chunk share."""
+        wh = self._spawn_worker(sim_gpu=sim_gpu)
+        if not wh.hello.wait(timeout_s):
+            return None
+        self._reprofile(wh)
+        self._ping_transport(wh)
+        self._prewarm_blobs(wh)
+        self._fault_event("joins", wid=wh.wid)
+        return wh.wid
+
+    def drain_worker(self, wid: Optional[int] = None) -> Optional[int]:
+        """Shrink the fleet by one, cleanly: the worker takes no new
+        chunks, finishes its in-flight tasks, hands its objects back to
+        the head, then exits (all driven by the monitor)."""
         with self._lock:
-            live = [wh for wh in self._handles.values() if wh.alive]
+            live = [wh for wh in self._handles.values()
+                    if wh.alive and not wh.draining]
+            if wid is not None:
+                live = [wh for wh in live if wh.wid == wid]
+            if not live:
+                return None
+            victim = live[-1]
+            victim.draining = True
+        return victim.wid
+
+    def scale_to(self, n: int) -> None:
+        """Elastic resize to ``n`` live workers: grows via
+        :meth:`add_worker` (profiled + pre-warmed), shrinks by marking
+        workers draining — they finish in-flight work and exit cleanly
+        once the monitor sees them idle."""
+        with self._lock:
+            live = [wh for wh in self._handles.values()
+                    if wh.alive and not wh.draining]
         delta = n - len(live)
         if delta > 0:
-            spawned = [self._spawn_worker() for _ in range(delta)]
-            for wh in spawned:
-                wh.hello.wait(10.0)
+            for _ in range(delta):
+                self.add_worker()
         elif delta < 0:
             for wh in live[:-delta]:
-                wh.draining = True
-                try:
-                    wh.send(("shutdown",))
-                except OSError:
-                    pass
+                self.drain_worker(wh.wid)
+
+    def rotate_authkey(self, new: Optional[bytes] = None) -> bytes:
+        """Swap the TCP transport's authkey. Connected workers learn
+        the new key in-band (``rekey``) so their future reconnects keep
+        working; anything holding the old key fails the challenge."""
+        if self.listener is None:
+            raise RuntimeError("authkey rotation needs transport='tcp'")
+        key = self.listener.rotate(new)
+        with self._lock:
+            handles = [wh for wh in self._handles.values() if wh.alive]
+        for wh in handles:
+            try:
+                wh.send(("rekey", key))
+            except OSError:
+                pass
+        self._fault_event("rekeys")
+        return key
+
+    def queue_depth(self) -> int:
+        """Unfinished tasks (duck-typed parity with TaskRuntime's pool
+        depth — what the elastic controller scales on)."""
+        with self._lock:
+            return sum(1 for t in self._tasks.values() if not t.finished)
 
     def profiles(self) -> List[DeviceProfile]:
         with self._lock:
@@ -1183,8 +1721,15 @@ class ClusterRuntime:
             "cells_shipped": self.cells_shipped,
             "cells_skipped": self.cells_skipped,
             "cached_blobs": len(self._blob_cache),
+            "chunks_executed_by_worker":
+                dict(self.chunks_executed_by_worker),
+            "faults": self._faults.snapshot(),
+            "fault_events": len(self.fault_events),
+            "transport": self.transport,
             "plane": self.plane.stats(),
         }
+        if self.chaos is not None:
+            out["chaos"] = self.chaos.stats()
         return out
 
     def phase_breakdown(self) -> Dict[str, float]:
@@ -1205,6 +1750,8 @@ class ClusterRuntime:
 
     def shutdown(self) -> None:
         self._shutdown = True
+        if self.listener is not None:
+            self.listener.close()
         with self._lock:
             handles = list(self._handles.values())
         for wh in handles:
@@ -1214,6 +1761,9 @@ class ClusterRuntime:
                 pass
         deadline = time.monotonic() + 2.0
         for wh in handles:
+            if wh.proc is None:
+                continue   # external worker: the shutdown message (or
+                           # its closed socket) is all we owe it
             wh.proc.join(max(0.05, deadline - time.monotonic()))
             if wh.proc.is_alive():
                 wh.proc.terminate()

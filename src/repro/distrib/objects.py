@@ -181,6 +181,13 @@ class ObjectPlane:
             self._events.pop(oid, None)
 
     # -- queries ----------------------------------------------------------
+    def contains(self, oid: int) -> bool:
+        """Whether the directory still tracks ``oid`` (False once
+        :meth:`release` consumed it — e.g. a duplicate/late "done" for a
+        chunk whose pfor round already gathered and dropped it)."""
+        with self._lock:
+            return oid in self._meta
+
     def meta(self, oid: int) -> ObjectMeta:
         with self._lock:
             return self._meta[oid]

@@ -17,11 +17,15 @@ the same framing a TCP transport would use):
                  | ("blob", bid, skeleton_or_None, {cell: value})
                  | ("unblob", bid) | ("get", oid) | ("free", oid)
                  | ("ping", payload) | ("profile",) | ("shutdown",)
+                 | ("rekey", authkey) | ("chaos", op, arg)
+                 | ("welcome", wid) | ("denied", reason)   # handshake
   worker → head: ("hello", profile, t_mono)
                  | ("done", tid, oid, nbytes, payload, ran_backend,
                     spans_or_None)
                  | ("err", tid, message, traceback)
                  | ("obj", oid, payload) | ("pong", nbytes, t_mono)
+                 | ("hb", t_mono)
+                 | ("attach", wid, attempts) | ("join", sim_gpu)
 
 where ``payload`` is ``("v", value)`` when the value travels with the
 message and ``None`` when it stayed (or was not found) on the worker —
@@ -47,9 +51,10 @@ clock offset and land the spans on one aligned timeline.
 from __future__ import annotations
 
 import pickle
+import threading
 import time
 import traceback
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
@@ -141,7 +146,13 @@ class WorkerState:
     def _body_for(self, bid: int) -> tuple:
         entry = self.bodies.get(bid)
         if entry is None:
-            entry = assemble_fn(self.blob_skel[bid], self.blob_cells[bid])
+            skel = self.blob_skel.get(bid)
+            if skel is None:
+                # the marker tells the head its shipped-state record for
+                # us is stale (dropped blob message / restarted worker):
+                # it resets the record so the retry re-ships in full
+                raise KeyError(f"blob-missing:{bid}")
+            entry = assemble_fn(skel, self.blob_cells[bid])
             self.bodies[bid] = entry
         return entry
 
@@ -191,36 +202,80 @@ class WorkerState:
         return result
 
 
-def worker_main(conn, wid: int, sim_gpu: bool = False) -> None:
-    """Entry point of the spawned worker process. ``sim_gpu`` makes the
-    profile pose as a GPU worker (jax-CPU execution) so heterogeneous
-    routing is exercisable on GPU-less hosts; the env var
-    ``REPRO_DISTRIB_SIM_GPU`` (see :mod:`.device`) does the same by
-    wid."""
+def _make_link(conn, wid: Optional[int], sim_gpu: bool):
+    """Build the transport link: an inherited pipe connection, or a
+    ``("tcp", address, authkey)`` endpoint the worker dials (and
+    re-dials, with exponential backoff) itself."""
+    from .transport import PipeLink, ReconnectingClient
+    if isinstance(conn, tuple) and conn and conn[0] == "tcp":
+        _, address, authkey = conn
+        link = ReconnectingClient(address, authkey, wid=wid,
+                                  sim_gpu=sim_gpu)
+        link.connect()   # attach/join handshake resolves our wid
+        return link
+    return PipeLink(conn)
+
+
+def worker_main(conn, wid: Optional[int] = None, sim_gpu: bool = False,
+                hb_interval_s: float = 0.0) -> None:
+    """Entry point of the worker process. ``conn`` is an inherited pipe
+    connection or a ``("tcp", (host, port), authkey)`` endpoint (the
+    multi-host path — also reachable via ``python -m
+    repro.distrib.worker --connect host:port --authkey <hex>`` from any
+    machine). ``sim_gpu`` makes the profile pose as a GPU worker
+    (jax-CPU execution) so heterogeneous routing is exercisable on
+    GPU-less hosts; the env var ``REPRO_DISTRIB_SIM_GPU`` (see
+    :mod:`.device`) does the same by wid.
+
+    With ``hb_interval_s > 0`` a daemon thread sends ``("hb", t_mono)``
+    liveness beacons; they are ``droppable`` — a disconnected TCP window
+    simply skips beats rather than queueing a burst for later."""
+    from .transport import WorkerFencedError
+    try:
+        link = _make_link(conn, wid, sim_gpu)
+    except (WorkerFencedError, OSError, EOFError):
+        return   # head unreachable or this wid is fenced: nothing to do
+    wid = getattr(link, "wid", wid) if wid is None else wid
     state = WorkerState(wid, sim_gpu=sim_gpu)
+    stop = threading.Event()
+    hb_silenced = threading.Event()   # chaos: hang with silent beacons
+
+    def _heartbeat() -> None:
+        while not stop.wait(hb_interval_s):
+            if hb_silenced.is_set():
+                continue
+            link.send(("hb", time.perf_counter()), droppable=True)
+
+    if hb_interval_s and hb_interval_s > 0:
+        threading.Thread(target=_heartbeat, name=f"worker-hb-{wid}",
+                         daemon=True).start()
     try:
         # the perf_counter stamp rides right next to the send so the
         # head's receive-time-minus-stamp offset estimate is bounded by
         # one one-way pipe latency, not by profile-measurement time
-        conn.send(("hello",
+        link.send(("hello",
                    measure_profile(wid, sim_gpu=sim_gpu or None)
                    .as_dict(), time.perf_counter()))
     except (EOFError, OSError, BrokenPipeError):
+        stop.set()
         return
+    slow_s = 0.0   # chaos: injected per-task latency
     while True:
         try:
-            msg = conn.recv()
+            msg = link.recv()
         except (EOFError, OSError):
-            break  # head is gone
+            break  # head is gone (or this link is fenced)
         kind = msg[0]
         try:
             if kind == "task":
                 _, tid, spec = msg
+                if slow_s > 0:
+                    time.sleep(slow_s)
                 spans = [] if spec.get("trace") else None
                 try:
                     result = state.run_task(spec, spans)
                 except BaseException as exc:  # noqa: BLE001
-                    conn.send(("err", tid, repr(exc),
+                    link.send(("err", tid, repr(exc),
                                traceback.format_exc()))
                     continue
                 oid = spec["out_oid"]
@@ -232,11 +287,11 @@ def worker_main(conn, wid: int, sim_gpu: bool = False) -> None:
                 ran = (spec.get("backend", "np")
                        if spec["kind"] == "chunk" else None)
                 if spec.get("gather") or nbytes <= INLINE_MAX:
-                    conn.send(("done", tid, oid, nbytes, ("v", result),
+                    link.send(("done", tid, oid, nbytes, ("v", result),
                                ran, spans))
                 else:
                     state.objects[oid] = result
-                    conn.send(("done", tid, oid, nbytes, None, ran,
+                    link.send(("done", tid, oid, nbytes, None, ran,
                                spans))
             elif kind == "blob":
                 _, bid, skeleton, delta = msg
@@ -249,23 +304,67 @@ def worker_main(conn, wid: int, sim_gpu: bool = False) -> None:
             elif kind == "get":
                 oid = msg[1]
                 if oid in state.objects:
-                    conn.send(("obj", oid, ("v", state.objects[oid])))
+                    link.send(("obj", oid, ("v", state.objects[oid])))
                 else:
-                    conn.send(("obj", oid, None))
+                    link.send(("obj", oid, None))
             elif kind == "ping":
-                conn.send(("pong", len(msg[1]), time.perf_counter()))
+                link.send(("pong", len(msg[1]), time.perf_counter()))
             elif kind == "profile":
                 # re-measure on request: the head serializes these so
                 # fleet micro-benchmarks never contend with each other
-                conn.send(("hello",
+                link.send(("hello",
                            measure_profile(state.wid,
                                            sim_gpu=state.sim_gpu or None)
                            .as_dict(), time.perf_counter()))
+            elif kind == "rekey":
+                # the head rotated the transport authkey; future
+                # reconnects must present the new one
+                link.set_authkey(msg[1])
+            elif kind == "chaos":
+                _, op, arg = msg
+                if op == "hang":
+                    arg = arg or {}
+                    if arg.get("silence_hb", True):
+                        hb_silenced.set()
+                    secs = arg.get("seconds")
+                    time.sleep(secs if secs is not None else 1e9)
+                    hb_silenced.clear()
+                elif op == "slow":
+                    slow_s = float(arg or 0.0)
+                elif op == "drop_conn":
+                    link.drop()
+                elif op == "babble":
+                    # deliberately malformed: too short to unpack
+                    link.send(("done",), droppable=True)
+                elif op == "exit":
+                    break
             elif kind == "shutdown":
                 break
         except (EOFError, OSError, BrokenPipeError):
             break
-    try:
-        conn.close()
-    except OSError:
-        pass
+    stop.set()
+    link.close()
+
+
+def _main() -> None:   # pragma: no cover - exercised via subprocess
+    """CLI for joining a worker to a remote head over TCP:
+
+        python -m repro.distrib.worker \\
+            --connect HOST:PORT --authkey HEX [--sim-gpu] [--hb 1.0]
+    """
+    import argparse
+    ap = argparse.ArgumentParser(description="join a cluster head")
+    ap.add_argument("--connect", required=True, metavar="HOST:PORT")
+    ap.add_argument("--authkey", required=True,
+                    help="hex-encoded transport authkey")
+    ap.add_argument("--sim-gpu", action="store_true")
+    ap.add_argument("--hb", type=float, default=1.0,
+                    help="heartbeat interval seconds (0 disables)")
+    ns = ap.parse_args()
+    host, _, port = ns.connect.rpartition(":")
+    worker_main(("tcp", (host, int(port)), bytes.fromhex(ns.authkey)),
+                wid=None, sim_gpu=ns.sim_gpu, hb_interval_s=ns.hb)
+
+
+if __name__ == "__main__":   # pragma: no cover
+    _main()

@@ -10,11 +10,12 @@ Public API mirrors the Ray calls the paper's generated code uses:
 """
 
 from .elastic import ElasticController, ElasticPolicy
-from .lineage import LineageGraph
+from .lineage import LineageGraph, LineagePoisonedError
 from .store import ObjectLostError, ObjectRef, ObjectStore
 from .tasks import TaskFailedError, TaskRuntime
 
 __all__ = [
-    "ElasticController", "ElasticPolicy", "LineageGraph", "ObjectLostError",
-    "ObjectRef", "ObjectStore", "TaskFailedError", "TaskRuntime",
+    "ElasticController", "ElasticPolicy", "LineageGraph",
+    "LineagePoisonedError", "ObjectLostError", "ObjectRef", "ObjectStore",
+    "TaskFailedError", "TaskRuntime",
 ]

@@ -1,10 +1,19 @@
-"""Elastic autoscaling policy for the raylite worker pool.
+"""Elastic autoscaling controller for the task runtimes.
 
-Watches queue depth and completed-task latency and resizes the pool within
-[min_workers, max_workers]. On real clusters this is the autoscaler
-requesting/releasing nodes; here it exercises the same control loop against
-the thread-backed pool so elasticity is a tested property of the runtime,
-not an aspiration.
+Watches queue depth and resizes the fleet within
+[min_workers, max_workers]. The same control loop drives both runtime
+flavors, duck-typed on ``scale_to`` plus a size/depth probe:
+
+  * :class:`repro.runtime.tasks.TaskRuntime` — thread-backed pool
+    (``rt.pool.size`` / ``rt.pool.queue_depth()``); scaling is instant.
+  * :class:`repro.distrib.cluster.ClusterRuntime` — real worker
+    processes (``rt.workers_alive()`` / ``rt.queue_depth()``); growth
+    spawns + profiles + pre-warms a worker, shrink marks one draining
+    (it finishes in-flight work, hands objects back, then exits).
+
+On real clusters this is the autoscaler requesting/releasing nodes;
+here it exercises the same control loop against live fleets so
+elasticity is a tested property of the runtimes, not an aspiration.
 """
 
 from __future__ import annotations
@@ -12,8 +21,6 @@ from __future__ import annotations
 import threading
 from dataclasses import dataclass
 from typing import Optional
-
-from .tasks import TaskRuntime
 
 
 @dataclass
@@ -26,7 +33,14 @@ class ElasticPolicy:
 
 
 class ElasticController:
-    def __init__(self, rt: TaskRuntime, policy: ElasticPolicy = None,
+    """Queue-depth autoscaler over any runtime exposing ``scale_to``.
+
+    Size and depth are probed duck-typed: a thread-pool runtime exposes
+    them on ``rt.pool``, the cluster runtime directly (a draining
+    cluster worker no longer counts toward size, so the controller
+    never double-shrinks a drain already in progress)."""
+
+    def __init__(self, rt, policy: ElasticPolicy = None,
                  interval_s: float = 0.05):
         self.rt = rt
         self.policy = policy or ElasticPolicy()
@@ -35,11 +49,28 @@ class ElasticController:
         self._thread: Optional[threading.Thread] = None
         self.decisions: list = []
 
+    def _size(self) -> int:
+        pool = getattr(self.rt, "pool", None)
+        if pool is not None:
+            return int(pool.size)
+        views = getattr(self.rt, "_views", None)
+        if views is not None:
+            # live, non-draining, attached workers — what placement
+            # actually has to work with
+            return len(views())
+        return int(self.rt.workers_alive())
+
+    def _depth(self) -> int:
+        pool = getattr(self.rt, "pool", None)
+        if pool is not None:
+            return int(pool.queue_depth())
+        return int(self.rt.queue_depth())
+
     def tick(self) -> int:
         """One control-loop step; returns the new target size."""
         p = self.policy
-        size = max(1, self.rt.pool.size)
-        depth = self.rt.pool.queue_depth()
+        size = max(1, self._size())
+        depth = self._depth()
         target = size
         if depth > p.scale_up_queue_per_worker * size:
             target = min(p.max_workers, size + p.step)

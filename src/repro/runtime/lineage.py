@@ -8,15 +8,29 @@ the object's parent vertex."
 The lineage graph maps every ObjectRef to the (pure, deterministic) task
 that produced it; ``reconstruct`` replays the minimal sub-graph for a lost
 object, re-fetching transitively-lost inputs first.
+
+Robustness contract (shared with the cluster runtime's replay path):
+replays are *budgeted* per object — an object whose producer keeps
+failing (or whose storage keeps evaporating under it) is **poisoned**
+with a named cause after ``max_replays`` attempts, and every dependent
+that tries to reconstruct through it fails with that cause attached
+instead of looping forever. Retry → replay lineage → poison dependents,
+in that order.
 """
 
 from __future__ import annotations
 
 import threading
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from .store import ObjectLostError, ObjectRef, ObjectStore
+
+
+class LineagePoisonedError(ObjectLostError):
+    """Reconstruction hit an object whose replay budget is exhausted
+    (or that was explicitly poisoned); the message names the root
+    cause so dependents fail forensically, not anonymously."""
 
 
 @dataclass
@@ -29,12 +43,16 @@ class TaskRecord:
 
 
 class LineageGraph:
-    def __init__(self, store: ObjectStore):
+    def __init__(self, store: ObjectStore, max_replays: int = 8):
         self.store = store
+        self.max_replays = max_replays   # per-object replay budget
         self._by_task: Dict[int, TaskRecord] = {}
         self._producer: Dict[int, int] = {}  # object id → task id
+        self._replay_counts: Dict[int, int] = {}
+        self._poisoned: Dict[int, str] = {}  # object id → named cause
         self._lock = threading.Lock()
         self.replays = 0
+        self.poisons = 0
 
     def record(self, rec: TaskRecord) -> None:
         with self._lock:
@@ -46,6 +64,37 @@ class LineageGraph:
         with self._lock:
             tid = self._producer.get(ref.id)
             return self._by_task.get(tid) if tid is not None else None
+
+    # -- poisoning ----------------------------------------------------------
+    def poison(self, ref: ObjectRef, cause: str) -> None:
+        """Mark an object unreconstructable with a named cause; every
+        dependent reconstruction through it raises that cause."""
+        with self._lock:
+            if ref.id not in self._poisoned:
+                self._poisoned[ref.id] = cause
+                self.poisons += 1
+
+    def poison_cause(self, ref: ObjectRef) -> Optional[str]:
+        with self._lock:
+            return self._poisoned.get(ref.id)
+
+    def _charge_replay(self, ref: ObjectRef) -> None:
+        """Spend one unit of the object's replay budget; poison it (and
+        raise, naming the exhaustion) when the budget runs dry."""
+        with self._lock:
+            cause = self._poisoned.get(ref.id)
+            if cause is None:
+                n = self._replay_counts.get(ref.id, 0) + 1
+                self._replay_counts[ref.id] = n
+                if n <= self.max_replays:
+                    self.replays += 1
+                    return
+                cause = (f"{ref} exceeded its replay budget "
+                         f"({self.max_replays}) — storage or producer "
+                         f"is failing repeatedly")
+                self._poisoned[ref.id] = cause
+                self.poisons += 1
+        raise LineagePoisonedError(cause)
 
     # -- recovery -----------------------------------------------------------
     def reconstruct(self, ref: ObjectRef) -> Any:
@@ -63,6 +112,9 @@ class LineageGraph:
                 return self.store.get_local(ref)
             except ObjectLostError:
                 pass  # evicted between the check and the read: replay
+        cause = self.poison_cause(ref)
+        if cause is not None:
+            raise LineagePoisonedError(cause)
         rec = self.producer_of(ref)
         if rec is None:
             raise ObjectLostError(
@@ -72,8 +124,7 @@ class LineageGraph:
         kwargs = {k: (self.reconstruct(v) if isinstance(v, ObjectRef)
                       else v)
                   for k, v in rec.kwargs.items()}
-        with self._lock:
-            self.replays += 1
+        self._charge_replay(ref)
         result = rec.fn(*args, **kwargs)
         outs = result if len(rec.out_refs) > 1 else (result,)
         value = None
