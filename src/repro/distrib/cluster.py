@@ -1119,8 +1119,68 @@ class ClusterRuntime:
             self._dispatch(ts)
         return out
 
+    def submit_batch(self, fn, arg_tuples: Sequence[Tuple[Any, ...]],
+                     device_pref: str = "",
+                     est_flops: float = 0.0) -> List[ClusterRef]:
+        """Batched submission: one ``fn`` over many argument tuples.
+        The function serializes once (every spec shares the blob) and
+        all tasks register under one lock before dispatch fans out —
+        the serving plane's coalesced fall-through path for plain
+        callables."""
+        if not arg_tuples:
+            return []
+        blob = dumps_fn(fn)
+        states: List[_TaskState] = []
+        refs: List[ClusterRef] = []
+        with self._lock:
+            for args in arg_tuples:
+                tid = next(self._task_ids)
+                out = self.plane.new_ref(tid)
+                spec = TaskSpec(tid, "fn", blob, tuple(args), out,
+                                device_pref=device_pref,
+                                est_flops=est_flops)
+                ts = _TaskState(spec)
+                self._tasks[tid] = ts
+                self._producer[out.oid] = tid
+                states.append(ts)
+                refs.append(out)
+        for ts in states:
+            pending = any(
+                isinstance(a, ClusterRef)
+                and self.plane.meta(a.oid).state not in (HEAD, REMOTE)
+                for a in ts.spec.args)
+            if pending:
+                threading.Thread(target=self._dispatch, args=(ts,),
+                                 daemon=True).start()
+            else:
+                self._dispatch(ts)
+        return refs
+
     def put(self, value: Any) -> ClusterRef:
         return self.plane.put_local(value)
+
+    def release(self, ref: ClusterRef) -> None:
+        """Drop every head-side record of ``ref``: its lineage (task +
+        producer entries), its directory slot, and — when a worker owns
+        the value — the worker's copy. After this the object can never
+        be fetched or replayed; callers own the ordering (release a
+        chain only after anchoring a replacement lineage root).
+        Long-lived serving loops call this to hold head memory flat."""
+        with self._lock:
+            tid = self._producer.pop(ref.oid, None)
+            if tid is not None:
+                self._tasks.pop(tid, None)
+        if not self.plane.contains(ref.oid):
+            return
+        meta = self.plane.meta(ref.oid)
+        if meta.state == REMOTE and meta.owner is not None:
+            wh = self._handle_for(meta.owner)
+            if wh is not None and wh.alive:
+                try:
+                    wh.send(("free", ref.oid))
+                except OSError:
+                    pass
+        self.plane.release(ref.oid)
 
     def get(self, ref_or_refs, timeout: Optional[float] = 60.0):
         if isinstance(ref_or_refs, list):

@@ -109,7 +109,7 @@ class Histogram:
         return {"count": self.count, "total": round(self.total, 9),
                 "mean": round(self.mean, 9), "min": self.min,
                 "max": self.max, "p50": self.percentile(50),
-                "p99": self.percentile(99)}
+                "p95": self.percentile(95), "p99": self.percentile(99)}
 
 
 class DictMetric(dict):

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import threading
 from dataclasses import dataclass
-from typing import Optional
+from typing import Callable, Optional
 
 
 @dataclass
@@ -41,10 +41,16 @@ class ElasticController:
     never double-shrinks a drain already in progress)."""
 
     def __init__(self, rt, policy: ElasticPolicy = None,
-                 interval_s: float = 0.05):
+                 interval_s: float = 0.05,
+                 depth_fn: Optional[Callable[[], int]] = None):
         self.rt = rt
         self.policy = policy or ElasticPolicy()
         self.interval_s = interval_s
+        # external pressure signal (e.g. a serving engine's queue
+        # depth) overriding the runtime's own task-queue probe — the
+        # fleet scales with *request* backlog, not just tasks already
+        # in flight
+        self.depth_fn = depth_fn
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self.decisions: list = []
@@ -61,6 +67,8 @@ class ElasticController:
         return int(self.rt.workers_alive())
 
     def _depth(self) -> int:
+        if self.depth_fn is not None:
+            return int(self.depth_fn())
         pool = getattr(self.rt, "pool", None)
         if pool is not None:
             return int(pool.queue_depth())

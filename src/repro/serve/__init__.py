@@ -1,0 +1,20 @@
+"""Serving layer: single-process continuous batching
+(:mod:`repro.serve.engine`) and the multi-tenant cluster serving plane
+(:mod:`repro.serve.cluster_engine`).
+
+Import note: :class:`ServeEngine` pulls in jax, so it is *not*
+re-exported here — the admission/loadgen/coalescing machinery stays
+importable on jax-free processes (cluster workers resolving shipped
+functions by reference must import this package cheaply).
+"""
+
+from .admission import AdmissionController, AdmissionError, TenantQuota
+from .cluster_engine import (BatchSpec, ClusterLMEngine,
+                             ClusterServeEngine, LMTicket, ServeTicket)
+from .loadgen import LoadResult, open_loop
+
+__all__ = [
+    "AdmissionController", "AdmissionError", "TenantQuota",
+    "BatchSpec", "ClusterServeEngine", "ClusterLMEngine",
+    "ServeTicket", "LMTicket", "LoadResult", "open_loop",
+]

@@ -9,31 +9,21 @@ Greedy sampling; per-request max_tokens / eos termination.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+
 from repro.models import transformer as T
 from repro.models.common import ArchConfig
 
 from .kvcache import SlotMap
+from .request import Request
 
-
-@dataclass
-class Request:
-    request_id: str
-    prompt: np.ndarray                  # (S,) int32
-    max_tokens: int = 16
-    eos_id: Optional[int] = None
-    generated: List[int] = field(default_factory=list)
-    slot: Optional[int] = None
-    submitted_s: float = field(default_factory=time.perf_counter)
-    first_token_s: Optional[float] = None
-    finished_s: Optional[float] = None
+__all__ = ["Request", "ServeEngine"]
 
 
 class ServeEngine:
@@ -67,6 +57,7 @@ class ServeEngine:
         self.finished: List[Request] = []
         self.kernel_registry = kernel_registry
         self.variant_cache = variant_cache
+        self._tenant_of: Dict[str, str] = {}
         self._mscope = obs.metrics.unique_scope("serve")
         self.ticks = 0
         self.prefills = 0
@@ -91,8 +82,33 @@ class ServeEngine:
 
         return jax.tree.map(ins, caches, one)
 
+    # latency histograms + per-tenant counters resolve through the
+    # instance scope lazily (same contract as MetricAttr: an instance
+    # built via __new__ in tests still gets a working telemetry surface)
+    @property
+    def _h_ttft(self):
+        return obs.MetricAttr._scope_of(self).histogram("ttft_ms")
+
+    @property
+    def _h_tpot(self):
+        return obs.MetricAttr._scope_of(self).histogram("tpot_ms")
+
+    @property
+    def _h_e2e(self):
+        return obs.MetricAttr._scope_of(self).histogram("e2e_ms")
+
+    @property
+    def _t_requests(self):
+        return obs.MetricAttr._scope_of(self).dictmetric("tenant_requests")
+
+    @property
+    def _t_tokens(self):
+        return obs.MetricAttr._scope_of(self).dictmetric("tenant_tokens")
+
     # -- API ----------------------------------------------------------------
-    def add_request(self, req: Request) -> None:
+    def add_request(self, req: Request, tenant: str = "default") -> None:
+        self._tenant_of[req.request_id] = tenant
+        self._t_requests[tenant] = self._t_requests.get(tenant, 0) + 1
         self.queue.append(req)
 
     def _admit(self) -> None:
@@ -107,7 +123,7 @@ class ServeEngine:
             tok = int(jnp.argmax(logits[0]))
             req.generated.append(tok)
             self.prefills += 1
-            self.tokens_generated += 1
+            self._count_token(req)
             req.first_token_s = time.perf_counter()
             self.caches = self._insert(self.caches, one_cache,
                                        jnp.int32(slot))
@@ -133,7 +149,7 @@ class ServeEngine:
         for slot, req in self.active.items():
             tok = int(next_tokens[slot])
             req.generated.append(tok)
-            self.tokens_generated += 1
+            self._count_token(req)
             self.slots.advance(slot)
             if (len(req.generated) >= req.max_tokens
                     or (req.eos_id is not None and tok == req.eos_id)
@@ -141,9 +157,25 @@ class ServeEngine:
                 req.finished_s = time.perf_counter()
                 done_slots.append(slot)
         for slot in done_slots:
-            self.finished.append(self.active.pop(slot))
+            req = self.active.pop(slot)
+            self._observe_finish(req)
+            self.finished.append(req)
             self.slots.free(slot)
         return len(self.active)
+
+    def _count_token(self, req: Request) -> None:
+        self.tokens_generated += 1
+        tenant = self._tenant_of.get(req.request_id, "default")
+        self._t_tokens[tenant] = self._t_tokens.get(tenant, 0) + 1
+
+    def _observe_finish(self, req: Request) -> None:
+        """Land the request's latency stamps in the ``serve#N``
+        histograms (TTFT / per-output-token / end-to-end)."""
+        n_gen = max(1, len(req.generated) - 1)
+        self._h_ttft.observe((req.first_token_s - req.submitted_s) * 1e3)
+        self._h_e2e.observe((req.finished_s - req.submitted_s) * 1e3)
+        self._h_tpot.observe(
+            (req.finished_s - req.first_token_s) * 1e3 / n_gen)
 
     def run_until_done(self, max_ticks: int = 10_000) -> List[Request]:
         for _ in range(max_ticks):
@@ -163,6 +195,15 @@ class ServeEngine:
             "active": len(self.active),
             "finished": len(self.finished),
             "slot_utilization": self.slots.utilization(),
+            "latency": {
+                name: {"count": h.count, "mean": round(h.mean, 6),
+                       "p50": h.percentile(50), "p95": h.percentile(95),
+                       "p99": h.percentile(99)}
+                for name, h in (("ttft_ms", self._h_ttft),
+                                ("tpot_ms", self._h_tpot),
+                                ("e2e_ms", self._h_e2e))},
+            "tenants": {"requests": dict(self._t_requests),
+                        "tokens": dict(self._t_tokens)},
         }
         reg = self.kernel_registry
         if reg is not None:
