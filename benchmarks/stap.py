@@ -308,11 +308,14 @@ def run_hetero(smoke: bool = False, out_path: str = "BENCH_distrib.json"
     from repro.distrib import ClusterRuntime
 
     if smoke:
-        gates, k, dof, iters = 16, 16, 16, 30
+        # large enough that per-round compute dominates dispatch/IPC
+        # overhead — the smoke CI asserts compare fleet variants'
+        # throughput, which is pure noise at tiny shapes
+        gates, k, dof, iters = 32, 32, 32, 80
     else:
         gates, k, dof, iters = 48, 32, 32, 120
     snap, train, steer, out = make_stap_data(gates, k, dof)
-    reps = 1 if smoke else 3
+    reps = 2 if smoke else 3
 
     out_ref = out.copy()
     t_seq = float("inf")
@@ -323,69 +326,103 @@ def run_hetero(smoke: bool = False, out_path: str = "BENCH_distrib.json"
         t_seq = min(t_seq, time.perf_counter() - t0)
 
     rows: List[Dict] = []
-    # traced: the hetero row's historically terrible speedup needs the
-    # span timeline to say *why*, not just that it is slow
-    rt = ClusterRuntime(workers=2, sim_gpu_workers=(1,), trace=True)
-    try:
-        comp = obs.metrics.scope("compile.stap_adaptive")
-        c0 = sum(comp.snapshot().values())
-        ck = compile_kernel(stap_adaptive, runtime=rt, workers=2)
-        compile_s = sum(comp.snapshot().values()) - c0
-        ck.pfor_config.distribute_threshold = 0
-        out_a = out.copy()
-        ck.call_variant("np", snap, train, steer, out_a, gates, k, dof,
-                        iters, ALPHA, LOADING)   # warm (ships blobs)
-        t_h = float("inf")
-        phases: Dict[str, float] = {}
-        for _ in range(reps):
+
+    def fleet_row(variant: str, workers: int, sim_gpus,
+                  np_only: bool = False, trace: bool = False) -> Dict:
+        """One serving-loop measurement on a fresh fleet: warm call to
+        ship blobs + compile the jitted twins, then best-of-reps."""
+        rt = ClusterRuntime(workers=workers, sim_gpu_workers=sim_gpus,
+                            np_only=np_only, trace=trace)
+        try:
+            comp = obs.metrics.scope("compile.stap_adaptive")
+            c0 = sum(comp.snapshot().values())
+            ck = compile_kernel(stap_adaptive, runtime=rt,
+                                workers=workers)
+            compile_s = sum(comp.snapshot().values()) - c0
+            ck.pfor_config.distribute_threshold = 0
             out_a = out.copy()
-            ph0 = rt.phase_breakdown()
-            t0 = time.perf_counter()
             ck.call_variant("np", snap, train, steer, out_a, gates, k,
-                            dof, iters, ALPHA, LOADING)
-            t_rep = time.perf_counter() - t0
-            if t_rep < t_h:
-                t_h = t_rep
-                phases = _phase_delta(ph0, rt.phase_breakdown())
-        err = float(abs(out_a - out_ref).max())
-        assert err < 1e-8, f"hetero STAP mismatch: {err:.2e}"
-        st = rt.stats()
-        # the heterogeneity contract: the same pfor *executed* np
-        # chunks on the CPU worker and jnp chunks on the GPU-posing
-        # worker (confirmed by worker done-messages, not dispatch
-        # intent), and the persistent blobs survived the serving loop
-        assert st["chunks_executed"].get("np", 0) > 0, st
-        assert st["chunks_executed"].get("jnp", 0) > 0, st
-        assert st["gpu_chunks"] > 0 and st["cpu_chunks"] > 0, st
-        assert st["blob_hits"] > 0, st
-        profs = rt.profiles()
-        rows.append({
-            "variant": "cluster_hetero", "workers": 2,
-            "simulated_gpu": True,
-            "wall_s": round(t_h, 5),
-            "gates_per_s": round(gates / t_h, 2),
-            "speedup_vs_seq": round(t_seq / t_h, 3),
-            "max_abs_err": err, "measured": True,
-            "gpu_chunks": st["gpu_chunks"],
-            "cpu_chunks": st["cpu_chunks"],
-            "chunks_executed": st["chunks_executed"],
-            "unit_backend": st["unit_backend"],
-            "blob_hits": st["blob_hits"],
-            "blob_misses": st["blob_misses"],
-            "bytes_shipped": st["bytes_shipped"],
-            "profiles": [{"gflops": p.gflops, "has_gpu": p.has_gpu,
-                          "gpu_gflops": p.gpu_gflops,
-                          "gpu_kind": p.gpu_kind} for p in profs],
-            "compile_s": round(compile_s, 5),
-            "ship_s": round(phases.get("ship_s", 0.0), 5),
-            "gather_s": round(phases.get("gather_s", 0.0), 5),
-            "compute_s": round(phases.get("compute_s", 0.0), 5),
-            "idle_s": round(phases.get("idle_s", 0.0), 5),
-            "phases": {k: round(v, 5) for k, v in phases.items()},
-            "diagnosis": _trace_diagnosis(phases, t_h, 2),
-        })
-    finally:
-        rt.shutdown()
+                            dof, iters, ALPHA, LOADING)   # warm
+            t_h = float("inf")
+            phases: Dict[str, float] = {}
+            for _ in range(reps):
+                out_a = out.copy()
+                ph0 = rt.phase_breakdown()
+                t0 = time.perf_counter()
+                ck.call_variant("np", snap, train, steer, out_a, gates,
+                                k, dof, iters, ALPHA, LOADING)
+                t_rep = time.perf_counter() - t0
+                if t_rep < t_h:
+                    t_h = t_rep
+                    phases = _phase_delta(ph0, rt.phase_breakdown())
+            err = float(abs(out_a - out_ref).max())
+            assert err < 1e-8, f"{variant} STAP mismatch: {err:.2e}"
+            st = rt.stats()
+            profs = rt.profiles()
+            row = {
+                "variant": variant, "workers": workers,
+                "simulated_gpu": bool(sim_gpus),
+                "np_only": np_only,
+                "wall_s": round(t_h, 5),
+                "gates_per_s": round(gates / t_h, 2),
+                "speedup_vs_seq": round(t_seq / t_h, 3),
+                "max_abs_err": err, "measured": True,
+                "gpu_chunks": st["gpu_chunks"],
+                "cpu_chunks": st["cpu_chunks"],
+                "chunks_executed": st["chunks_executed"],
+                "unit_backend": st["unit_backend"],
+                "blob_hits": st["blob_hits"],
+                "blob_misses": st["blob_misses"],
+                "bytes_shipped": st["bytes_shipped"],
+                # accelerated-path telemetry (ISSUE 9): compiled-twin
+                # cache behavior, device residency, row re-ship skips,
+                # and gather/compute overlap from pipelined rounds
+                "jit_hits": st["jit_hits"],
+                "jit_recompiles": st["jit_recompiles"],
+                "jit_fallbacks": st["jit_fallbacks"],
+                "resident_hits": st["resident_hits"],
+                "resident_cells": st["resident_cells"],
+                "rows_skipped": st["rows_skipped"],
+                "bytes_saved_rows": st["bytes_saved_rows"],
+                "pipeline_depth": st["pipeline_depth"],
+                "overlap_s": round(phases.get("overlap_s", 0.0), 5),
+                "profiles": [{"gflops": p.gflops, "has_gpu": p.has_gpu,
+                              "gpu_gflops": p.gpu_gflops,
+                              "gpu_kind": p.gpu_kind} for p in profs],
+                "compile_s": round(compile_s, 5),
+                "ship_s": round(phases.get("ship_s", 0.0), 5),
+                "gather_s": round(phases.get("gather_s", 0.0), 5),
+                "compute_s": round(phases.get("compute_s", 0.0), 5),
+                "idle_s": round(phases.get("idle_s", 0.0), 5),
+                "phases": {k_: round(v, 5) for k_, v in phases.items()},
+            }
+            if trace:
+                row["diagnosis"] = _trace_diagnosis(phases, t_h,
+                                                    workers)
+            return row
+        finally:
+            rt.shutdown()
+
+    # control arm: the same posed fleet with twin routing suppressed —
+    # the bar cluster_hetero must clear to claim the accelerator helps
+    rows.append(fleet_row("cluster_np_only", 2, (1,), np_only=True))
+    # traced: the hetero row's historically terrible speedup (0.006x
+    # pre-fix) needs the span timeline to say *why*, not just how fast
+    hetero = fleet_row("cluster_hetero", 2, (1,), trace=True)
+    rows.append(hetero)
+    # scaling arm: twice the fleet (2 CPU + 2 posed GPU)
+    rows.append(fleet_row("cluster_hetero_4w", 4, (1, 3)))
+
+    # the heterogeneity contract: the same pfor *executed* np chunks on
+    # the CPU worker and jnp chunks on the GPU-posing worker (confirmed
+    # by worker done-messages, not dispatch intent), the persistent
+    # blobs survived the serving loop, and the serving loop ran on the
+    # compiled twin path (jit cache hits, no eager fallbacks)
+    assert hetero["chunks_executed"].get("np", 0) > 0, hetero
+    assert hetero["chunks_executed"].get("jnp", 0) > 0, hetero
+    assert hetero["gpu_chunks"] > 0 and hetero["cpu_chunks"] > 0, hetero
+    assert hetero["blob_hits"] > 0, hetero
+    assert hetero["jit_hits"] > 0, hetero
 
     rows.insert(0, {"variant": "sequential_numpy_hetero_ref",
                     "workers": 0, "wall_s": round(t_seq, 5),
@@ -398,7 +435,8 @@ def run_hetero(smoke: bool = False, out_path: str = "BENCH_distrib.json"
         doc = {"workload": "stap_adaptive", "rows": []}
     doc["rows"] = [r for r in doc.get("rows", [])
                    if r.get("variant") not in
-                   ("cluster_hetero", "sequential_numpy_hetero_ref")]
+                   ("cluster_hetero", "cluster_np_only",
+                    "cluster_hetero_4w", "sequential_numpy_hetero_ref")]
     doc["rows"].extend(rows)
     doc["hetero_shape"] = {"gates": gates, "k_train": k, "dof": dof,
                            "iters": iters, "smoke": smoke}
@@ -406,10 +444,12 @@ def run_hetero(smoke: bool = False, out_path: str = "BENCH_distrib.json"
         json.dump(doc, f, indent=2)
     for r in rows:
         extra = ""
-        if r["variant"] == "cluster_hetero":
+        if r["variant"].startswith("cluster_"):
             extra = (f",gpu_chunks={r['gpu_chunks']}"
                      f",cpu_chunks={r['cpu_chunks']}"
-                     f",blob_hits={r['blob_hits']}")
+                     f",blob_hits={r['blob_hits']}"
+                     f",jit_hits={r['jit_hits']}"
+                     f",rows_skipped={r['rows_skipped']}")
         print(f"stap_hetero.{r['variant']},workers={r['workers']},"
               f"{r['gates_per_s']}_gates_per_s,"
               f"x{r['speedup_vs_seq']}{extra}", flush=True)

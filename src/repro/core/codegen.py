@@ -92,6 +92,10 @@ class EmitMeta:
     # pfor unit indices that got a jnp twin body (hybrid variant); the
     # exec namespace must bind __jxp (jax.numpy) when this is non-empty
     pfor_jnp_units: List[int] = field(default_factory=list)
+    # subset of pfor_jnp_units whose twin also carries a vmappable
+    # per-iteration function wired through __pfor_jit (compiled path);
+    # the exec namespace must additionally bind __jax and __pfor_jit
+    pfor_jit_units: List[int] = field(default_factory=list)
 
 
 class Emitter:
@@ -120,11 +124,30 @@ class Emitter:
         # functional .at[] path instead
         self.store_np_captured = False
         self.body_locals: Set[str] = set()
+        # jit-iteration mode: emit ONE pfor iteration as a pure function
+        # of (g, __offs, *arrays) for vmap/jit via __pfor_jit. Captured
+        # arrays indexed by the pfor var collapse to per-iteration row
+        # variables; every other captured array becomes an explicit
+        # parameter; writes land functionally in the row variables and
+        # are returned for the caller to scatter.
+        self.jit_iter = False
+        self.jit_pfor_var: Optional[str] = None
+        self.jit_params: Dict[str, int] = {}   # array name → arg position
+        self.jit_rows: Dict[str, str] = {}     # array name → row variable
+        self.jit_write_arrays: List[str] = []  # row arrays written (order)
+        self._assign_log: List[str] = []       # assignment events, in order
+        self._jit_future: List[Unit] = []      # units after current one
+        self._jit_loop_depth = 0
+        # row captures first touched inside a sequential loop: their
+        # prelude depends only on (g, __offs, params), so it hoists
+        # above the outermost loop instead of bailing the jit
+        self._jit_hoist: List[str] = []
 
     def define_syms_for(self, arr: str) -> None:
         for sym in self.pending_syms.pop(arr, []):
             d = sym.rsplit("__d", 1)[1]
             self.w(f"{sym} = {arr}.shape[{d}]")
+            self._note_assign(sym)
 
     # -- low-level -------------------------------------------------------
     def w(self, line: str) -> None:
@@ -198,9 +221,13 @@ class Emitter:
         """Slice string for an access + ordered iterator vars of its dims."""
         extra_lo = extra_lo or {}
         extra_hi = extra_hi or {}
+        base, idx_list = acc.array, list(acc.idx)
+        if self.jit_iter:
+            base, idx_list = self._jit_rebase(acc.array, idx_list,
+                                              is_write=False)
         comps: List[str] = []
         order: List[str] = []
-        for idx in acc.idx:
+        for idx in idx_list:
             ivars = [v for v in idx.vars()
                      if v in frame or v in extra_lo]
             if not ivars:
@@ -216,8 +243,56 @@ class Emitter:
             hi = (extra_hi.get(v) or hull.hi[v]) + rest
             comps.append(f"{affine_py(lo)}:{affine_py(hi)}")
             order.append(v)
-        sl = f"{acc.array}[{', '.join(comps)}]" if comps else acc.array
+        sl = f"{base}[{', '.join(comps)}]" if comps else base
         return sl, order
+
+    # -- jit-iteration helpers ---------------------------------------------
+    def _jit_rebase(self, array: str, idx: List[Affine],
+                    is_write: bool) -> Tuple[str, List[Affine]]:
+        """Route one array access for the jit-iteration function: body
+        locals pass through; g-free captured arrays become parameters;
+        ``A[g, …]`` accesses collapse onto A's row variable. Anything
+        else (g in a later dim, non-identity g index) bails the jit."""
+        g = self.jit_pfor_var
+        if array in self.body_locals:
+            return array, idx
+        uses_g = [i for i, a in enumerate(idx) if g in a.vars()]
+        if not uses_g:
+            if array in self.jit_rows:
+                raise EmitError("jit: whole-array access after row capture")
+            if is_write:
+                raise EmitError("jit: g-free write to captured array")
+            self._jit_param(array)
+            return array, idx
+        if uses_g != [0] or affine_py(idx[0]) != g:
+            raise EmitError("jit: non-row pfor indexing")
+        return self._jit_row(array), list(idx[1:])
+
+    def _note_assign(self, name: str) -> None:
+        if self.jit_iter:
+            self._assign_log.append(name)
+
+    def _jit_param(self, array: str) -> int:
+        if array not in self.jit_params:
+            self.jit_params[array] = len(self.jit_params)
+        return self.jit_params[array]
+
+    def _jit_row(self, array: str) -> str:
+        row = self.jit_rows.get(array)
+        if row is not None:
+            return row
+        pos = self._jit_param(array)
+        row = f"__row_{array}"
+        line = f"{row} = {array}[{self.jit_pfor_var} - __offs[{pos}]]"
+        if self._jit_loop_depth:
+            # hoisted above the loop — not an in-loop assignment event
+            self._jit_hoist.append(line)
+        else:
+            self.w(line)
+            self._note_assign(row)
+        self.jit_rows[array] = row
+        self.body_locals.add(row)
+        return row
 
     def align(self, expr: str, order: List[str],
               frame: Tuple[str, ...]) -> str:
@@ -372,6 +447,13 @@ class Emitter:
     def _emit_raised_fast(self, stmt: CanonStmt) -> None:
         dims = self.free_dims(stmt)
         hull = compute_hull(dims)
+        if self.jit_iter:
+            # a bound depending on the pfor var would become a traced
+            # slice extent — shapes must stay static under jit
+            gv = self.jit_pfor_var
+            for d in dims:
+                if gv in d.lower.vars() or gv in d.upper.vars():
+                    raise EmitError("jit: pfor-var-dependent bound")
         # frame follows the WRITE's dim order (cov[j][i] = f(i,j) must
         # emit the rhs transposed), then any remaining domain iterators
         domain_order = [d.var for d in dims]
@@ -396,6 +478,7 @@ class Emitter:
             # captured arrays — force the conversion at the definition
             # (free for values that are already jnp).
             self.body_locals.add(arr)
+            self._note_assign(arr)
             if stmt.aug is None:
                 rhs_src = expr
             else:
@@ -406,6 +489,8 @@ class Emitter:
             return
 
         if plan.kind == "diag":
+            if self.jit_iter:
+                raise EmitError("jit: diagonal write")
             v = frame[0]
             iv = self.fresh("ix")
             self.w(f"{iv} = {self.xp}.arange({affine_py(hull.lo[v])}, "
@@ -425,8 +510,14 @@ class Emitter:
             return
 
         # slice / masked
+        warr, widx = arr, list(stmt.write_idx)
+        if self.jit_iter:
+            warr, widx = self._jit_rebase(arr, widx, is_write=True)
+            if arr not in self.body_locals and arr not in \
+                    self.jit_write_arrays:
+                self.jit_write_arrays.append(arr)
         comps = []
-        for idx in stmt.write_idx:
+        for idx in widx:
             ivars = [x for x in idx.vars() if x in frame]
             if not ivars:
                 comps.append(affine_py(idx))
@@ -436,9 +527,9 @@ class Emitter:
             comps.append(f"{affine_py(hull.lo[v] + rest)}:"
                          f"{affine_py(hull.hi[v] + rest)}")
         sl = ", ".join(comps)
-        tgt = f"{arr}[{sl}]"
+        tgt = f"{warr}[{sl}]" if sl else warr
         if plan.kind == "slice":
-            self._store(arr, sl, tgt, expr, stmt.aug)
+            self._store(warr, sl, tgt, expr, stmt.aug)
         else:  # masked
             mask = self.write_mask_expr(plan.conds, frame, hull)
             mv = self.fresh("m")
@@ -448,10 +539,11 @@ class Emitter:
             else:
                 combined = f"{tgt} {stmt.aug} ({expr})"
             where = f"{self.xp}.where({mv}, {combined}, {tgt})"
-            self._store(arr, sl, tgt, where, None)
+            self._store(warr, sl, tgt, where, None)
 
     def _store(self, arr: str, sl: str, tgt: str, expr: str,
                aug: Optional[str]) -> None:
+        self._note_assign(arr)
         if self.backend == "np" or (self.store_np_captured
                                     and arr not in self.body_locals):
             # hybrid jnp body: partial writes to *captured* arrays stay
@@ -463,6 +555,15 @@ class Emitter:
                 self.w(f"{tgt} = {expr}")
             else:
                 self.w(f"{tgt} {aug}= {expr}")
+        elif not sl:
+            # whole-value store on a row variable (jit-iteration mode):
+            # a plain functional rebind
+            if aug is None:
+                self.w(f"{arr} = {expr}")
+            elif aug in ("+", "*"):
+                self.w(f"{arr} = {arr} {aug} ({expr})")
+            else:
+                raise EmitError(f"aug {aug} on accelerator")
         else:
             if aug is None:
                 self.w(f"{arr} = {arr}.at[{sl}].set({expr})")
@@ -542,10 +643,15 @@ class Emitter:
     # -- other units ------------------------------------------------------
     def emit_fft(self, u: FFTUnit) -> None:
         st = u.stmt
+        if self.jit_iter and st.src not in self.body_locals:
+            if st.src in self.jit_rows:
+                raise EmitError("jit: whole-array access after row capture")
+            self._jit_param(st.src)
         axis = st.axis if st.axis is not None else -1
         n = f", n={affine_py(st.n)}" if st.n is not None else ""
         fn = f"{self.xp}.fft." + st.fn.split(".")[-1]
         self.body_locals.add(st.out)   # whole-name rebind (privatized)
+        self._note_assign(st.out)
         self.w(f"{st.out} = {fn}({st.src}{n}, axis={axis})")
         self.meta.raised_ops.append("fft")
         self.define_syms_for(st.out)
@@ -559,6 +665,9 @@ class Emitter:
                 self.w(line)
 
     def emit_seq_loop(self, u: SeqLoopUnit) -> None:
+        if self.jit_iter:
+            self._emit_jit_seq_loop(u)
+            return
         d = u.dim
         self.w(f"for {d.var} in range({affine_py(d.lower)}, "
                f"{affine_py(d.upper)}, {d.step}):")
@@ -571,11 +680,144 @@ class Emitter:
         self.bound.discard(d.var)
         self.depth -= 1
 
+    def _emit_jit_seq_loop(self, u: SeqLoopUnit) -> None:
+        """Sequential loop inside the jit-iteration function →
+        ``lax.fori_loop`` with an explicit carry tuple: unrolling a
+        long convergence loop (STAP runs 800 Richardson steps) would
+        explode XLA compile time.
+
+        Two passes: probe-emit the body as straight-line code to learn
+        which names it assigns, then wrap those lines in a fori body
+        function threading every previously-defined assigned name as
+        carry. Names first defined inside the loop must not escape it —
+        if a later unit reads one, the jit bails (eager fallback)."""
+        d = u.dim
+        if d.step != 1:
+            raise EmitError("jit: non-unit sequential loop step")
+        if not u.body:
+            return
+        defined_before = (set(self.body_locals)
+                          | set(self.jit_rows.values())
+                          | set(self._assign_log))
+        log_at = len(self._assign_log)
+        save_lines = list(self.lines)
+        save_depth = self.depth
+        save_bound = set(self.bound)
+        pre_rows = len(self.jit_rows)
+        body_at = len(self.lines)
+        self._jit_loop_depth += 1
+        self.bound.add(d.var)
+        try:
+            self._emit_jit_units(u.body)
+        finally:
+            self._jit_loop_depth -= 1
+        body_lines = self.lines[body_at:]
+        self.lines = save_lines
+        self.depth = save_depth
+        self.bound = save_bound
+
+        # rows first captured during this loop hoist above it (their
+        # preludes are in _jit_hoist), so they count as defined-before
+        defined_before.update(list(self.jit_rows.values())[pre_rows:])
+        if self._jit_loop_depth == 0 and self._jit_hoist:
+            for ln in self._jit_hoist:
+                self.w(ln)
+            self._jit_hoist = []
+
+        assigned_in = list(dict.fromkeys(self._assign_log[log_at:]))
+        carry = [n for n in assigned_in if n in defined_before]
+        fresh = [n for n in assigned_in
+                 if n not in defined_before and not n.startswith("__")]
+        if not carry:
+            raise EmitError("jit: sequential loop carries no state")
+        if fresh:
+            escapes = set(fresh) & self._unit_reads(self._jit_future)
+            if escapes:
+                raise EmitError(
+                    f"jit: loop-local names escape: {sorted(escapes)}")
+
+        cs = ", ".join(carry) + ","
+        cv = self.fresh("c")
+        fv = self.fresh("fori")
+        self.w(f"{cv} = ({cs})")
+        self.w(f"def {fv}({d.var}, __c):")
+        self.w(f"    ({cs}) = __c")
+        pad = "    "
+        self.lines.extend(pad + ln for ln in body_lines)
+        self.w(f"    return ({cs})")
+        self.w(f"{cv} = __jax.lax.fori_loop({affine_py(d.lower)}, "
+               f"{affine_py(d.upper)}, {fv}, {cv})")
+        self.w(f"({cs}) = {cv}")
+
+    def _emit_jit_units(self, units: Sequence[Unit]) -> None:
+        """Emit a unit list keeping ``_jit_future`` pointed at every
+        unit that still runs after the current one (loop escape
+        analysis needs the full continuation, not just siblings)."""
+        outer = self._jit_future
+        for i, b in enumerate(units):
+            self._jit_future = list(units[i + 1:]) + outer
+            self.emit_unit(b)
+        self._jit_future = outer
+
+    def _unit_reads(self, units: Sequence[Unit]) -> Set[str]:
+        """Every name (array, scalar, iterator bound) a unit list might
+        read — conservative, for loop-local escape analysis."""
+        names: Set[str] = set()
+
+        def expr(e: VExpr) -> None:
+            if isinstance(e, VAccess):
+                names.add(e.array)
+                for idx in e.idx:
+                    names.update(idx.vars())
+            elif isinstance(e, VBin):
+                expr(e.left)
+                expr(e.right)
+            elif isinstance(e, VUnary):
+                expr(e.operand)
+            elif isinstance(e, VReduce):
+                for d in e.dims:
+                    names.update(d.lower.vars())
+                    names.update(d.upper.vars())
+                expr(e.child)
+            elif isinstance(e, VParam):
+                names.add(e.name)
+
+        def unit(u: Unit) -> None:
+            if isinstance(u, RaisedUnit):
+                st = u.stmt
+                expr(st.rhs)
+                names.add(st.write_array)  # read-modify on partial writes
+                for idx in st.write_idx:
+                    names.update(idx.vars())
+                for d in st.domain.dims:
+                    names.update(d.lower.vars())
+                    names.update(d.upper.vars())
+            elif isinstance(u, FFTUnit):
+                names.add(u.stmt.src)
+                names.add(u.stmt.out)
+                if u.stmt.n is not None:
+                    names.update(u.stmt.n.vars())
+            elif isinstance(u, SeqLoopUnit):
+                names.update(u.dim.lower.vars())
+                names.update(u.dim.upper.vars())
+                for b in u.body:
+                    unit(b)
+            else:
+                raise EmitError("jit: opaque unit in continuation")
+
+        for u in units:
+            unit(u)
+        return names
+
     def _emit_pfor_body(self, u: PforUnit, body_name: str) -> None:
         """One chunk-body function executing iterations [lo, hi)."""
-        d = u.dim
         self.w(f"def {body_name}(__lo, __hi):")
         self.depth += 1
+        self._emit_pfor_loop(u)
+        self.depth -= 1
+
+    def _emit_pfor_loop(self, u: PforUnit) -> None:
+        d = u.dim
         self.w(f"for {d.var} in range(__lo, __hi, {d.step}):")
         self.depth += 1
         self.bound.add(d.var)
@@ -584,7 +826,31 @@ class Emitter:
         for b in u.body:
             self.emit_unit(b)
         self.bound.discard(d.var)
-        self.depth -= 2
+        self.depth -= 1
+
+    def _emit_jit_iter(self, u: PforUnit, iter_name: str) -> None:
+        """The per-iteration function for __pfor_jit: computes one pfor
+        iteration g functionally and returns the written rows."""
+        d = u.dim
+        if d.step != 1:
+            raise EmitError("jit: non-unit pfor step")
+        if not u.body:
+            raise EmitError("jit: empty pfor body")
+        g = d.var
+        entry_depth = self.depth
+        self.depth += 1
+        self.bound.add(g)
+        self._jit_future = []
+        self._emit_jit_units(u.body)
+        if not self.jit_write_arrays:
+            raise EmitError("jit: body writes no pfor rows")
+        rows = ", ".join(self.jit_rows[a] for a in self.jit_write_arrays)
+        self.w(f"return ({rows},)")
+        self.bound.discard(g)
+        self.depth = entry_depth
+        params = ", ".join(self.jit_params)
+        self.lines.insert(0, "    " * entry_depth
+                          + f"def {iter_name}({g}, __offs, {params}):")
 
     def emit_pfor(self, u: PforUnit) -> None:
         if self.backend == "jnp":
@@ -627,19 +893,54 @@ class Emitter:
         """Emit the accelerator twin of one pfor body, or None when the
         unit's body is jnp-infeasible (loop fallback / black box). The
         twin is a separate function scope, so its temp names and body
-        locals are independent of the np body's."""
+        locals are independent of the np body's.
+
+        When the body additionally fits the stricter jit-iteration
+        shape (pure row-parallel over the pfor var), the twin leads
+        with a compiled fast path: a nested per-iteration function
+        handed to __pfor_jit, which vmaps + jits it per pow2 iteration
+        bucket and scatters the returned rows in place. The eager
+        per-iteration loop stays behind it as the always-correct
+        fallback (and as the path for workers without jax jit)."""
         jnp_name = f"{body_name}__jnp"
         sub = Emitter(self.s, "jnp")
         sub.xp = "__jxp"
         sub.store_np_captured = True
-        sub.depth = self.depth
+        sub.depth = self.depth + 1
         sub.bound = set(self.bound)
-        sub.pending_syms = pending_syms
+        sub.pending_syms = {k: list(v) for k, v in pending_syms.items()}
         try:
-            sub._emit_pfor_body(u, jnp_name)
+            sub._emit_pfor_loop(u)
         except (EmitError, RaiseError):
             return None
+
+        jit = Emitter(self.s, "jnp")
+        jit.xp = "__jxp"
+        jit.jit_iter = True
+        jit.jit_pfor_var = u.dim.var
+        jit.depth = self.depth + 1
+        jit.bound = set(self.bound)
+        jit.pending_syms = {k: list(v) for k, v in pending_syms.items()}
+        iter_name = f"__pfor_iter_{idx}"
+        try:
+            jit._emit_jit_iter(u, iter_name)
+            jit_lines: Optional[List[str]] = jit.lines
+        except (EmitError, RaiseError):
+            jit_lines = None
+
+        self.w(f"def {jnp_name}(__lo, __hi):")
+        self.depth += 1
+        if jit_lines:
+            self.lines.extend(jit_lines)
+            params = ", ".join(jit.jit_params)
+            trail = "," if len(jit.jit_params) == 1 else ""
+            wpos = tuple(jit.jit_params[a] for a in jit.jit_write_arrays)
+            self.w(f"if __pfor_jit({iter_name}, __lo, __hi, "
+                   f"({params}{trail}), {wpos!r}):")
+            self.w("    return")
+            self.meta.pfor_jit_units.append(idx)
         self.lines.extend(sub.lines)
+        self.depth -= 1
         return jnp_name
 
     def emit_unit(self, u: Unit) -> None:

@@ -108,6 +108,16 @@ def _make_np_variant(gen_np: codegen.GeneratedVariant,
             raise codegen.EmitError(
                 "hybrid np variant references jax, which is unavailable")
         extra["__jxp"] = jnp
+        if getattr(gen_np.meta, "pfor_jit_units", None):
+            # twin bodies lead with the compiled per-iteration path:
+            # bind jax (lax.fori_loop in emitted code) and the
+            # vmap/jit/residency runner
+            import jax
+
+            from repro.distrib.accel import pfor_jit
+
+            extra["__jax"] = jax
+            extra["__pfor_jit"] = pfor_jit
     np_fn = _exec_variant(gen_np, np, extra)
     return Variant("np", np_fn, gen_np)
 

@@ -239,15 +239,23 @@ def chunk_backend_seconds(flops: float, nbytes: float, profile,
     A *simulated* GPU (``gpu_kind == "sim"``: jax-CPU posing for
     laptops/CI) prices like an integrated accelerator — no staging
     overhead, memory bandwidth as the transfer term — so CI-sized
-    problems still exercise heterogeneous routing; real devices keep
-    the honest PCIe-ish terms."""
+    problems still exercise heterogeneous routing; real devices price
+    with the staging bandwidth the device probe *measured* (``h2d_gbs``
+    / ``d2h_gbs`` on the profile), falling back to the PCIe-ish
+    constant only when no measurement exists."""
     if backend == "jnp":
         rate = max(1e-3, getattr(profile, "gpu_gflops", 0.0))
         if getattr(profile, "gpu_kind", "") == "sim":
             xfer_gbs = max(1e-3, getattr(profile, "membw_gbs", 1.0))
             overhead = 0.0
         else:
-            xfer_gbs = GPU_XFER_GBS
+            # a chunk stages inputs in and gathers writes out, so the
+            # slower direction bounds the transfer term
+            h2d = getattr(profile, "h2d_gbs", 0.0) or 0.0
+            d2h = getattr(profile, "d2h_gbs", 0.0) or 0.0
+            measured = min(b for b in (h2d, d2h) if b > 0) \
+                if (h2d > 0 or d2h > 0) else 0.0
+            xfer_gbs = measured if measured > 0 else GPU_XFER_GBS
             overhead = GPU_CHUNK_OVERHEAD_S
     else:
         rate = max(1e-3, getattr(profile, "gflops", 1.0))

@@ -315,6 +315,7 @@ class CompiledKernel:
             "contracted_arrays": len(
                 getattr(fusion, "contracted_arrays", ()) or ()),
             "pfor_jnp_units": len(self.pfor_jnp_units()),
+            "pfor_jit_units": len(self.pfor_jit_units()),
             "from_cache": self.from_cache,
         }
 
@@ -326,6 +327,15 @@ class CompiledKernel:
         if v is None or v.generated is None:
             return []
         return list(getattr(v.generated.meta, "pfor_jnp_units", ()) or ())
+
+    def pfor_jit_units(self) -> List[int]:
+        """Subset of :meth:`pfor_jnp_units` whose twin also carries a
+        vmappable per-iteration function wired through ``__pfor_jit``
+        (the compiled accelerator path)."""
+        v = self.variants.get("np")
+        if v is None or v.generated is None:
+            return []
+        return list(getattr(v.generated.meta, "pfor_jit_units", ()) or ())
 
     def call_variant(self, name: str, *args, **kwargs):
         """Force a specific variant (benchmark harness hook)."""

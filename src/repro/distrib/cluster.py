@@ -29,6 +29,7 @@ runtime crosses process boundaries:
 
 from __future__ import annotations
 
+import hashlib
 import itertools
 import logging
 import multiprocessing as mp
@@ -58,6 +59,15 @@ log = logging.getLogger("repro.distrib")
 # (a dropped/evicted blob message): the head resets its shipped-state
 # bookkeeping for the worker so the resubmit re-ships in full
 BLOB_MISSING = "blob-missing"
+
+# worker errors carrying this marker mean "I don't hold chunk rows you
+# told me to keep" (restarted worker / dropped rows cache): the head
+# forgets its shipped-rows records for the worker so retries re-ship
+ROWS_MISSING = "rows-missing"
+
+# a worker whose jax cannot enable float64 raises this marker instead
+# of silently running the jnp twin in f32; the retry downgrades to np
+X64_FAILED = "x64-enable-failed"
 
 
 class ClusterTaskError(RuntimeError):
@@ -136,6 +146,13 @@ class _WorkerHandle:
         self.inflight: set = set()
         self.blobs: set = set()                    # bids with skeleton
         self.blob_cells: Dict[int, Dict[str, str]] = {}  # bid→cell→hash
+        # (bid, name, lo, hi) → content hash of the chunk rows last
+        # shipped there: a serving loop re-dispatching the same range
+        # with unchanged rows sends a ("keep",) marker instead
+        self.sliced_rows: Dict[tuple, str] = {}
+        # the hello carrying a failed-GPU-probe reason is counted into
+        # the faults scope once per worker, not once per re-profile
+        self.gpu_probe_fault_counted = False
         self.send_lock = threading.Lock()
 
     def note_clock(self, t_worker: float) -> None:
@@ -184,6 +201,7 @@ class _WorkerHandle:
         with self.send_lock:
             self.blobs.clear()
             self.blob_cells.clear()
+            self.sliced_rows.clear()
 
     def ship_blob(self, bid: int, parts: ClosureParts) -> "Tuple[int, int]":
         """Bring this worker's cached copy of blob ``bid`` up to date:
@@ -234,6 +252,21 @@ class ClusterRuntime:
     blob_misses = obs.MetricAttr("blob_misses")
     cells_shipped = obs.MetricAttr("cells_shipped")
     cells_skipped = obs.MetricAttr("cells_skipped")
+    rows_skipped = obs.MetricAttr("rows_skipped")
+    bytes_saved_rows = obs.MetricAttr("bytes_saved_rows")
+    # worker-side accel counters, aggregated off chunk "done" messages
+    jit_hits = obs.MetricAttr("jit_hits")
+    jit_recompiles = obs.MetricAttr("jit_recompiles")
+    jit_fallbacks = obs.MetricAttr("jit_fallbacks")
+    jit_compile_s = obs.MetricAttr("jit_compile_s")
+    resident_hits = obs.MetricAttr("resident_hits")
+    resident_stages = obs.MetricAttr("resident_stages")
+    resident_cells = obs.MetricAttr("resident_cells")
+
+    # keys of the per-chunk accel stats dict the head aggregates
+    _ACCEL_KEYS = ("jit_hits", "jit_recompiles", "jit_fallbacks",
+                   "jit_compile_s", "resident_hits", "resident_stages",
+                   "resident_cells")
 
     def __init__(self, workers: int = 2, *,
                  start_method: Optional[str] = None,
@@ -253,6 +286,8 @@ class ClusterRuntime:
                  task_deadline_s: Optional[float] = None,
                  quorum: int = 1,
                  degrade_local: bool = True,
+                 pipeline_depth: int = 2,
+                 np_only: bool = False,
                  chaos: Optional[ChaosPlan] = None):
         if start_method is None:
             # GPU-capable workers (real or posing) may execute jnp twin
@@ -282,6 +317,14 @@ class ClusterRuntime:
         self.task_deadline_s = task_deadline_s
         self.quorum = max(1, quorum)
         self.degrade_local = degrade_local
+        # pfor pipelining: each worker's iteration share splits into
+        # this many sub-chunks, gathered as-completed — ship(k+1) and
+        # gather(k-1) overlap compute(k). Depth 1 restores the
+        # one-chunk-per-worker synchronous round.
+        self.pipeline_depth = max(1, int(pipeline_depth))
+        # np_only suppresses jnp twin routing (every chunk runs the np
+        # body) — the control arm for hetero speedup comparisons
+        self.np_only = bool(np_only)
         self.chaos = chaos
         self.listener: Optional[HeadListener] = None
         self.address: Optional[Tuple[str, int]] = None
@@ -353,6 +396,17 @@ class ClusterRuntime:
         self.blob_misses = 0
         self.cells_shipped = 0         # broadcast cells actually sent
         self.cells_skipped = 0         # unchanged cells NOT re-sent
+        self.rows_skipped = 0          # sliced chunk rows NOT re-sent
+        self.bytes_saved_rows = 0      # vs re-shipping them every round
+        # device-acceleration telemetry (worker accel counters riding
+        # back on chunk "done" messages)
+        self.jit_hits = 0              # compiled twin executions
+        self.jit_recompiles = 0        # fresh XLA compilations
+        self.jit_fallbacks = 0         # eager-loop fallbacks
+        self.jit_compile_s = 0.0       # seconds spent compiling
+        self.resident_hits = 0         # device arrays reused in place
+        self.resident_stages = 0       # host→device stagings performed
+        self.resident_cells = 0        # distinct arrays made resident
         # head-local capability (the "stay local" side of profitability)
         self.local_profile = measure_profile(-1)
         self.variant_cache = None
@@ -632,11 +686,30 @@ class ClusterRuntime:
             wh.profile = DeviceProfile.from_dict(msg[1])
             if len(msg) > 2:
                 wh.note_clock(msg[2])
+            reason = getattr(wh.profile, "gpu_probe_error", "")
+            if reason and not wh.gpu_probe_fault_counted:
+                # the probe failing silently is how the 0.006x hetero
+                # regression hid: a "GPU" fleet quietly priced as CPUs
+                wh.gpu_probe_fault_counted = True
+                self._fault_event("gpu_probe_failures", wid=wh.wid,
+                                  reason=reason)
+                log.warning("worker %d GPU probe failed: %s",
+                            wh.wid, reason)
             wh.hello.set()
         elif kind == "done":
             _, tid, oid, nbytes, payload = msg[:5]
             ran = msg[5] if len(msg) > 5 else None
             wspans = msg[6] if len(msg) > 6 else None
+            wstats = msg[7] if len(msg) > 7 else None
+            if wstats:
+                # worker accel counter deltas (jit cache, residency)
+                # piggybacked on chunk dones — aggregate fleet-wide.
+                # Duplicates are harmless here: the deltas were drained
+                # on the worker, so a chaos-duplicated done carries {}
+                for k in self._ACCEL_KEYS:
+                    v = wstats.get(k)
+                    if v:
+                        setattr(self, k, getattr(self, k) + v)
             with self._lock:
                 ts = self._tasks.get(tid)
                 wh.inflight.discard(tid)
@@ -683,6 +756,20 @@ class ClusterRuntime:
                 # so the retry re-ships skeleton + cells in full
                 wh.forget_blobs()
                 self._fault_event("blob_missing", wid=wh.wid, task=tid)
+            if ROWS_MISSING in (message or ""):
+                # the worker lacks chunk rows our hash record says it
+                # cached (restart/drop): forget the records so retries
+                # re-ship rows in full
+                with wh.send_lock:
+                    wh.sliced_rows.clear()
+                self._fault_event("rows_missing", wid=wh.wid, task=tid)
+            if X64_FAILED in (message or ""):
+                # the worker's jax refused float64 — its jnp twin would
+                # silently compute in f32. The error path already
+                # degrades the retry to the np body (TaskSpec.alt);
+                # count the event so CI can see it happened
+                self._fault_event("x64_enable_failed", wid=wh.wid,
+                                  task=tid)
             if ts is None or ts.finished:
                 return
             ts.spec.attempts += 1
@@ -1025,19 +1112,14 @@ class ClusterRuntime:
                 time.sleep(0.02)  # worker died under us; replace + retry
 
     def _count_chunk_shipment(self, spec: TaskSpec) -> None:
-        """Sliced-payload + backend-routing telemetry for one *delivered*
-        chunk task (a worker-death resubmit re-ships for real and
-        re-counts; a failed placement attempt never counts)."""
+        """Backend-routing telemetry for one *delivered* chunk task (a
+        worker-death resubmit re-ships for real and re-counts). The
+        per-arg sliced counters live in :meth:`_wire_spec`, where the
+        ship-vs-keep decision is made."""
         if spec.backend == "jnp":
             self.gpu_chunks += 1
         else:
             self.cpu_chunks += 1
-        for nm in spec.sliced:
-            full = spec.parts.sliced[nm]
-            chunk_nb = int(full[spec.lo:spec.hi].nbytes)
-            self.sliced_args += 1
-            self.bytes_shipped += chunk_nb
-            self.bytes_saved_sliced += int(full.nbytes) - chunk_nb
 
     def _wire_spec(self, spec: TaskSpec, wh: _WorkerHandle) -> Dict:
         """Encode a task for the wire, resolving every ref arg so the
@@ -1079,9 +1161,32 @@ class ClusterRuntime:
             self.cells_skipped += len(parts.cell_pkls) - cells
             self.bytes_shipped += nbytes
             # per-chunk rows of the sliceable arrays: each worker gets
-            # payload/n instead of the whole closure (ROADMAP item #1)
-            sliced_wire = {nm: parts.sliced[nm][spec.lo:spec.hi]
-                           for nm in spec.sliced}
+            # payload/n instead of the whole closure (ROADMAP item #1).
+            # Content-hashed per (blob, name, range) and per worker: a
+            # serving loop re-dispatching unchanged rows to the same
+            # worker sends a ("keep",) marker instead of the bytes —
+            # the worker reuses the rows it cached last round (its
+            # rollback keeps them byte-exact)
+            sliced_wire = {}
+            for nm in spec.sliced:
+                rows = parts.sliced[nm][spec.lo:spec.hi]
+                rb = int(rows.nbytes)
+                h = hashlib.sha256(rows.tobytes()).hexdigest()
+                rk = (spec.blob_id, nm, spec.lo, spec.hi)
+                self.sliced_args += 1
+                self.bytes_saved_sliced += \
+                    int(parts.sliced[nm].nbytes) - rb
+                with wh.send_lock:
+                    keep = wh.sliced_rows.get(rk) == h
+                    if not keep:
+                        wh.sliced_rows[rk] = h
+                if keep:
+                    sliced_wire[nm] = ("keep",)
+                    self.rows_skipped += 1
+                    self.bytes_saved_rows += rb
+                else:
+                    sliced_wire[nm] = ("rows", rows)
+                    self.bytes_shipped += rb
             t1 = time.perf_counter()
             self._phase.add_time("ship_s", t1 - t0)
             if self.trace:
@@ -1328,6 +1433,8 @@ class ClusterRuntime:
                     pass
                 wh.blobs.discard(bid)
                 wh.blob_cells.pop(bid, None)
+                for k in [k for k in wh.sliced_rows if k[0] == bid]:
+                    del wh.sliced_rows[k]
 
     def _prewarm_blobs(self, wh: _WorkerHandle) -> None:
         """Ship every cached persistent body (skeleton + cells) to a
@@ -1378,6 +1485,76 @@ class ClusterRuntime:
             views = self._views()
         return views
 
+    def _gather_chunk(self, ref: ClusterRef, spec: TaskSpec,
+                      arrays: Dict[str, np.ndarray], body, rid: int,
+                      tracing: bool, ph) -> None:
+        """Block on one chunk's result and merge its sparse writes.
+        No per-chunk gather timeout: a healthy chunk may legitimately
+        compute for minutes; hangs surface via heartbeat expiry or
+        ``deadline_s`` resubmission, both bounded by max_attempts."""
+        g0 = time.perf_counter()
+        try:
+            updates = self.get(ref, timeout=None)
+        except ClusterTaskError:
+            if not self.degrade_local:
+                raise
+            # this chunk terminally failed (retry budget spent, or the
+            # fleet died under it): run it in-process — the body's
+            # closure writes the head's live arrays directly, so no
+            # merge is needed
+            self._fault_event("degraded_chunks", task=spec.task_id,
+                              lo=spec.lo, hi=spec.hi)
+            log.warning("pfor chunk [%d, %d) degraded to "
+                        "local execution", spec.lo, spec.hi)
+            with obs.span("degraded_chunk", cat="fault",
+                          task=spec.task_id):
+                body(spec.lo, spec.hi)
+            updates = None
+        g1 = time.perf_counter()
+        self._merge_updates(arrays, updates, spec)
+        g2 = time.perf_counter()
+        ph.add_time("gather_s", g1 - g0)
+        ph.add_time("merge_s", g2 - g1)
+        if tracing:
+            rec = obs.recorder()
+            rec.record("gather", "pfor", g0, g1,
+                       args={"round": rid, "task": spec.task_id})
+            rec.record("merge", "pfor", g1, g2,
+                       args={"round": rid, "task": spec.task_id})
+
+    def _gather_pipelined(self, chunks, arrays: Dict[str, np.ndarray],
+                          body, rid: int, tracing: bool, ph) -> None:
+        """As-completed gather: merge each sub-chunk the moment its
+        result lands, while the rest of the round is still computing.
+        pfor chunks write disjoint regions, so merges commute — the
+        result is bitwise-identical to the in-order gather. The
+        ``overlap_s`` phase metric accumulates head-side gather/merge
+        seconds spent while at least one chunk was still in flight —
+        exactly the wall time the synchronous round serialized."""
+        with self._lock:
+            pend = [(ref, spec, self._tasks.get(spec.task_id))
+                    for ref, spec in chunks]
+        overlap = 0.0
+        while pend:
+            ready = [p for p in pend
+                     if p[2] is None or p[2].event.is_set()]
+            if not ready:
+                # head blocked on in-flight results: this is *overlapped*
+                # wall (workers are computing under it), so it reports
+                # as wait_s, distinct from the gather_s fetch/merge work
+                w0 = time.perf_counter()
+                pend[0][2].event.wait(0.005)
+                ph.add_time("wait_s", time.perf_counter() - w0)
+                continue
+            for p in ready:
+                pend.remove(p)
+                g0 = time.perf_counter()
+                self._gather_chunk(p[0], p[1], arrays, body, rid,
+                                   tracing, ph)
+                if pend:
+                    overlap += time.perf_counter() - g0
+        ph.add_time("overlap_s", overlap)
+
     def pfor_shards(self, body, lo: int, hi: int,
                     tile: Optional[int] = None,
                     written: Sequence[str] = (),
@@ -1423,7 +1600,8 @@ class ClusterRuntime:
             if nm in arrays and arrays[nm].ndim >= 1
             and lo >= 0 and arrays[nm].shape[0] >= hi)
         bodies = {"np": body}
-        jnp_body = getattr(body, "__jnp__", None)
+        jnp_body = (None if self.np_only
+                    else getattr(body, "__jnp__", None))
         if jnp_body is not None:
             bodies["jnp"] = jnp_body
         t_split0 = time.perf_counter()
@@ -1477,6 +1655,7 @@ class ClusterRuntime:
             # the fleet's backend mix by cycling the per-view choices
             chunk_backends = [backends[i % len(backends)]
                               for i in range(len(ranges))]
+            chunk_prefs: List[Optional[int]] = [None] * len(ranges)
         else:
             # chosen-backend throughput, with skew clamped to 4x: a
             # probe that mis-measured on a throttled host must not
@@ -1491,6 +1670,29 @@ class ClusterRuntime:
             ranges = self.scheduler.proportional_chunks(
                 lo, hi, weights, drop_empty=False)
             chunk_backends = list(backends)
+            # ranges stay index-aligned with views: chunk i was sized
+            # for view i's throughput, so placement gets a soft
+            # affinity to that worker
+            chunk_prefs = [v.wid for v in views]
+        depth = self.pipeline_depth
+        if not tile and depth > 1:
+            # pipelining: each worker share splits into `depth`
+            # contiguous sub-chunks (backend + affinity preserved),
+            # gathered as-completed below — the head ships sub-chunk
+            # k+1 and merges k-1 while the worker computes k, instead
+            # of the whole fleet idling through one synchronous barrier
+            sub_r: List[range] = []
+            sub_b: List[str] = []
+            sub_p: List[Optional[int]] = []
+            for r, bk, pw in zip(ranges, chunk_backends, chunk_prefs):
+                d = max(1, min(depth, len(r)))
+                edges = np.linspace(r.start, r.stop, d + 1).astype(int)
+                for c in range(d):
+                    sub_r.append(range(int(edges[c]),
+                                       int(edges[c + 1])))
+                    sub_b.append(bk)
+                    sub_p.append(pw)
+            ranges, chunk_backends, chunk_prefs = sub_r, sub_b, sub_p
         ub = self.unit_backend.setdefault(
             f"{body.__name__}@{parts_by['np'].code_hash[:8]}", {})
         # plan phase = everything so far except the split (body
@@ -1508,7 +1710,7 @@ class ClusterRuntime:
             rec.record("plan", "pfor", t_split1, t_plan1,
                        args={"round": rid})
         chunks = []
-        for r, bk in zip(ranges, chunk_backends):
+        for r, bk, pw in zip(ranges, chunk_backends, chunk_prefs):
             if len(r) == 0:
                 continue
             tid = next(self._task_ids)
@@ -1522,6 +1724,7 @@ class ClusterRuntime:
                             written=tuple(written),
                             sliced=slice_names, parts=parts_by[bk],
                             gather=True, backend=bk, alt=alt,
+                            pref_wid=pw,
                             device_pref=({"np": "cpu", "jnp": "gpu"}[bk]
                                          if hetero else ""))
             ts = _TaskState(spec, deadline_s=deadline_s)
@@ -1548,43 +1751,14 @@ class ClusterRuntime:
                                         "chunks": len(chunks)})
         self.pfor_runs += 1
         try:
-            for ref, spec in chunks:
-                # no per-chunk gather timeout: a healthy chunk may
-                # legitimately compute for minutes; hangs surface via
-                # heartbeat expiry or ``deadline_s`` resubmission, both
-                # bounded by max_attempts
-                g0 = time.perf_counter()
-                try:
-                    updates = self.get(ref, timeout=None)
-                except ClusterTaskError:
-                    if not self.degrade_local:
-                        raise
-                    # this chunk terminally failed (retry budget spent,
-                    # or the fleet died under it): run it in-process —
-                    # the body's closure writes the head's live arrays
-                    # directly, so no merge is needed
-                    self._fault_event("degraded_chunks",
-                                      task=spec.task_id,
-                                      lo=spec.lo, hi=spec.hi)
-                    log.warning("pfor chunk [%d, %d) degraded to "
-                                "local execution", spec.lo, spec.hi)
-                    with obs.span("degraded_chunk", cat="fault",
-                                  task=spec.task_id):
-                        body(spec.lo, spec.hi)
-                    updates = None
-                g1 = time.perf_counter()
-                self._merge_updates(arrays, updates, spec)
-                g2 = time.perf_counter()
-                ph.add_time("gather_s", g1 - g0)
-                ph.add_time("merge_s", g2 - g1)
-                if tracing:
-                    rec = obs.recorder()
-                    rec.record("gather", "pfor", g0, g1,
-                               args={"round": rid,
-                                     "task": spec.task_id})
-                    rec.record("merge", "pfor", g1, g2,
-                               args={"round": rid,
-                                     "task": spec.task_id})
+            if depth > 1 and len(chunks) > 1:
+                self._gather_pipelined(chunks, arrays, body, rid,
+                                       tracing, ph)
+            else:
+                # depth-1 synchronous round: gather in dispatch order
+                for ref, spec in chunks:
+                    self._gather_chunk(ref, spec, arrays, body, rid,
+                                       tracing, ph)
         finally:
             # chunk updates are consumed; their lineage window is over.
             # Drop every per-chunk record so a serving loop calling the
@@ -1626,7 +1800,8 @@ class ClusterRuntime:
                     "pfor_round", "pfor", rt0, rt1,
                     args={"round": rid, "name": body.__name__,
                           "unit": getattr(body, "__unit__", None),
-                          "chunks": len(chunks), "workers": nw})
+                          "chunks": len(chunks), "workers": nw,
+                          "depth": depth})
 
     def distribute_profitable(self, flops: float, payload_bytes: int,
                               n_chunks: int,
@@ -1780,6 +1955,16 @@ class ClusterRuntime:
             "blob_misses": self.blob_misses,
             "cells_shipped": self.cells_shipped,
             "cells_skipped": self.cells_skipped,
+            "rows_skipped": self.rows_skipped,
+            "bytes_saved_rows": self.bytes_saved_rows,
+            "jit_hits": self.jit_hits,
+            "jit_recompiles": self.jit_recompiles,
+            "jit_fallbacks": self.jit_fallbacks,
+            "jit_compile_s": self.jit_compile_s,
+            "resident_hits": self.resident_hits,
+            "resident_stages": self.resident_stages,
+            "resident_cells": self.resident_cells,
+            "pipeline_depth": self.pipeline_depth,
             "cached_blobs": len(self._blob_cache),
             "chunks_executed_by_worker":
                 dict(self.chunks_executed_by_worker),
@@ -1795,8 +1980,11 @@ class ClusterRuntime:
     def phase_breakdown(self) -> Dict[str, float]:
         """Measured per-phase seconds for this runtime's pfor rounds
         (``plan/split/ship/dispatch/gather/merge/round``, plus
-        ``compute``/``idle`` when tracing is on), straight from the
-        ``cluster#N.phase`` scope of the unified metrics registry."""
+        ``overlap``/``wait`` for pipelined rounds — ``wait`` is head
+        time blocked on in-flight results, i.e. wall overlapped with
+        worker compute — and ``compute``/``idle`` when tracing is on),
+        straight from the ``cluster#N.phase`` scope of the unified
+        metrics registry."""
         return self._phase.snapshot()
 
     def telemetry(self) -> Dict[str, Any]:

@@ -47,6 +47,9 @@ class DeviceProfile:
     gpu_kind: str = ""             # "cuda" / "tpu" / "sim" / ""
     gpu_gflops: float = 0.0        # measured (or simulated) device rate
     transport_mbs: float = 0.0     # filled by the head's payload ping
+    h2d_gbs: float = 0.0           # measured host→device staging bandwidth
+    d2h_gbs: float = 0.0           # measured device→host gather bandwidth
+    gpu_probe_error: str = ""      # why the GPU probe failed (if it did)
 
     def as_dict(self) -> Dict[str, Any]:
         return asdict(self)
@@ -65,28 +68,56 @@ def _probe_mem_bytes() -> int:
 
 
 def _probe_gpu() -> tuple:
-    """(has_gpu, kind, gpu_gflops) — measured on the real device."""
+    """(has_gpu, kind, gpu_gflops, h2d_gbs, d2h_gbs, error) — measured
+    on the real device.
+
+    x64 is enabled *before* the timing matmul: the jnp twin workloads
+    this rate prices are float64 (PolyBench semantics), and an f32 probe
+    reads ~2x optimistic against them. Probe failures are returned as a
+    reason string — the head records it on the profile and counts it in
+    the faults scope instead of silently reporting a bare CPU."""
     if os.environ.get("REPRO_DISTRIB_PROBE_GPU") != "1":
-        return False, "", 0.0
+        return False, "", 0.0, 0.0, 0.0, ""
     try:
         import jax
+
+        # must precede any traced op, and matches the twins' f64 math
+        jax.config.update("jax_enable_x64", True)
         import jax.numpy as jnp
         devs = [d for d in jax.devices()
                 if d.platform not in ("cpu",)]
-        if devs:
-            n = 512
-            a = jnp.ones((n, n))
-            (a @ a).block_until_ready()   # compile + warm
-            best = float("inf")
-            for _ in range(3):
-                t0 = time.perf_counter()
-                (a @ a).block_until_ready()
-                best = min(best, time.perf_counter() - t0)
-            gflops = 2.0 * n ** 3 / max(1e-9, best) / 1e9
-            return True, devs[0].platform, round(gflops, 3)
-    except Exception:
-        pass
-    return False, "", 0.0
+        if not devs:
+            return False, "", 0.0, 0.0, 0.0, "no non-cpu jax devices"
+        n = 512
+        a = jnp.ones((n, n), dtype=jnp.float64)
+        (a @ a).block_until_ready()   # compile + warm
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            (a @ a).block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        gflops = 2.0 * n ** 3 / max(1e-9, best) / 1e9
+
+        # staging bandwidth, both directions — what the chunk pricing in
+        # core.cost actually spends per chunk (8 MB, the blob-cache
+        # sweep size, so the number reflects bulk transfers)
+        host = np.ones(1 << 20, dtype=np.float64)  # 8 MB
+        dev = jax.device_put(host)
+        dev.block_until_ready()
+        h2d = d2h = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            jax.device_put(host).block_until_ready()
+            h2d = min(h2d, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            np.asarray(dev)
+            d2h = min(d2h, time.perf_counter() - t0)
+        h2d_gbs = host.nbytes / max(1e-9, h2d) / 1e9
+        d2h_gbs = host.nbytes / max(1e-9, d2h) / 1e9
+        return (True, devs[0].platform, round(gflops, 3),
+                round(h2d_gbs, 3), round(d2h_gbs, 3), "")
+    except Exception as exc:
+        return False, "", 0.0, 0.0, 0.0, f"{type(exc).__name__}: {exc}"
 
 
 def sim_gpu_for(wid: int) -> bool:
@@ -130,7 +161,8 @@ def measure_profile(wid: int, n: int = 128,
         best = min(best, time.perf_counter() - t0)
     membw_gbs = 2.0 * buf.nbytes / max(1e-9, best) / 1e9  # read + write
 
-    has_gpu, gpu_kind, gpu_gflops = _probe_gpu()
+    (has_gpu, gpu_kind, gpu_gflops,
+     h2d_gbs, d2h_gbs, gpu_probe_error) = _probe_gpu()
     if sim_gpu is None:
         sim_gpu = sim_gpu_for(wid)
     if sim_gpu and not has_gpu:
@@ -152,4 +184,7 @@ def measure_profile(wid: int, n: int = 128,
         has_gpu=has_gpu,
         gpu_kind=gpu_kind,
         gpu_gflops=gpu_gflops,
+        h2d_gbs=h2d_gbs,
+        d2h_gbs=d2h_gbs,
+        gpu_probe_error=gpu_probe_error,
     )

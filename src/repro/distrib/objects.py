@@ -81,6 +81,11 @@ class TaskSpec:
     # chunk that *errors* on a worker (e.g. jax missing there) degrades
     # to the np twin on resubmit instead of burning all its attempts
     alt: Optional[Tuple[str, int, Any]] = None
+    # chunk: the worker whose measured throughput this range was sized
+    # for — a soft placement affinity, so proportional chunking stays
+    # meaningful (without it, small pipelined sub-chunks all drain to
+    # whichever worker finishes fastest and the sizing is moot)
+    pref_wid: Optional[int] = None
 
 
 class ObjectPlane:

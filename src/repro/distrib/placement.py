@@ -47,6 +47,10 @@ class PlacementWeights:
     # hetero sharder already budgeted for jnp chunks); soft, so a
     # CPU-less fleet still runs everything
     cpu_pref_penalty: float = 2.0
+    # stick a chunk to the worker its range was *sized for*
+    # (proportional_chunks paired range i with view i's throughput);
+    # soft — load pressure or a death still moves it elsewhere
+    affinity: float = 2.0
 
 
 class PlacementScheduler:
@@ -62,6 +66,8 @@ class PlacementScheduler:
             s += w.gpu_bonus
         elif task.device_pref == "cpu" and view.profile.has_gpu:
             s -= w.cpu_pref_penalty
+        if getattr(task, "pref_wid", None) == view.wid:
+            s += w.affinity
         total = sum(arg_bytes.values())
         if total > 0:
             local = sum(nb for oid, nb in arg_bytes.items()

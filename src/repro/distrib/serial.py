@@ -44,6 +44,7 @@ _PICKLE_PROTO = 4
 _MOD = "mod"        # re-import module by name
 _VAL = "val"        # pickled value
 _PFOR = "pfor"      # substitute the worker's sequential __pfor_run
+_JIT = "jit"        # substitute the worker's __pfor_jit fast path
 _SKIP = "skip"      # unpicklable and unknown: leave unbound
 
 
@@ -79,6 +80,8 @@ def _skeleton_dict(fn) -> Dict[str, Any]:
         val = fn.__globals__[name]
         if name == "__pfor_run":
             gslots[name] = (_PFOR, None)
+        elif name == "__pfor_jit":
+            gslots[name] = (_JIT, None)
         elif isinstance(val, types.ModuleType):
             gslots[name] = (_MOD, val.__name__)
         else:
@@ -105,17 +108,31 @@ def _build_globals(payload: Dict[str, Any]) -> Dict[str, Any]:
             if data.split(".")[0] == "jax":
                 # jnp twin bodies carry float64 semantics; the head
                 # enabled x64 before generating them, so the worker must
-                # match before jax traces anything (see compiler.py)
+                # match before jax traces anything (see compiler.py).
+                # A worker that cannot enable x64 would silently compute
+                # f32 results for f64 twins — that must surface as a
+                # task error (the head counts it and downgrades this
+                # worker's chunks to the np body via TaskSpec.alt), not
+                # as quietly wrong numerics. Import failures fall
+                # through to import_module below for the honest error.
                 try:
                     import jax
-                    jax.config.update("jax_enable_x64", True)
                 except Exception:
-                    pass
+                    jax = None
+                if jax is not None:
+                    try:
+                        jax.config.update("jax_enable_x64", True)
+                    except Exception as exc:
+                        raise RuntimeError(
+                            f"x64-enable-failed: {exc!r}") from exc
             g[name] = importlib.import_module(data)
         elif kind == _VAL:
             g[name] = pickle.loads(data)
         elif kind == _PFOR:
             g[name] = _sequential_pfor_run
+        elif kind == _JIT:
+            from .accel import pfor_jit
+            g[name] = pfor_jit
         # _SKIP: unbound — a NameError on use is the honest failure mode
     return g
 

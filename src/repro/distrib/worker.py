@@ -21,7 +21,7 @@ the same framing a TCP transport would use):
                  | ("welcome", wid) | ("denied", reason)   # handshake
   worker → head: ("hello", profile, t_mono)
                  | ("done", tid, oid, nbytes, payload, ran_backend,
-                    spans_or_None)
+                    spans_or_None, accel_stats_or_None)
                  | ("err", tid, message, traceback)
                  | ("obj", oid, payload) | ("pong", nbytes, t_mono)
                  | ("hb", t_mono)
@@ -58,6 +58,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
+from . import accel
 from .device import measure_profile
 from .serial import assemble_fn, closure_arrays, loads_fn, rebase_chunk
 
@@ -115,6 +116,9 @@ class WorkerState:
         self.blob_skel: Dict[int, bytes] = {}
         self.blob_cells: Dict[int, Dict[str, Any]] = {}
         self.bodies: Dict[int, tuple] = {}    # bid → (fn, name→cell)
+        # (bid, name, lo, hi) → cached chunk rows: the head skips
+        # re-shipping rows whose content hash it already sent here
+        self.sliced_rows: Dict[tuple, np.ndarray] = {}
         self.tasks_run = 0
         self.chunks_run = 0
 
@@ -134,6 +138,10 @@ class WorkerState:
         for name, pkl in delta.items():
             val = pickle.loads(pkl)
             cells[name] = val
+            if isinstance(val, np.ndarray):
+                # broadcast cells persist across chunk tasks (rollback
+                # keeps them pristine), so their device copies can too
+                accel.remember(val)
             if entry is not None and name in entry[1]:
                 # live body: swap the changed cell in place
                 entry[1][name].cell_contents = val
@@ -142,6 +150,8 @@ class WorkerState:
         self.blob_skel.pop(bid, None)
         self.blob_cells.pop(bid, None)
         self.bodies.pop(bid, None)
+        for key in [k for k in self.sliced_rows if k[0] == bid]:
+            del self.sliced_rows[key]
 
     def _body_for(self, bid: int) -> tuple:
         entry = self.bodies.get(bid)
@@ -176,20 +186,34 @@ class WorkerState:
 
     def run_task(self, spec, spans=None) -> Any:
         if spec["kind"] == "chunk":
-            lo = spec["lo"]
+            lo, hi = spec["lo"], spec["hi"]
+            bid = spec["blob_id"]
             t0 = time.perf_counter()
-            body, cellmap = self._body_for(spec["blob_id"])
+            body, cellmap = self._body_for(bid)
             t1 = time.perf_counter()
-            for name, chunk in (spec.get("sliced") or {}).items():
+            for name, wire in (spec.get("sliced") or {}).items():
                 # per-chunk rows, re-based so the body's global leading-
-                # axis indices resolve; replaced wholesale on every task,
-                # so nothing to roll back afterwards
-                cellmap[name].cell_contents = rebase_chunk(chunk, lo)
+                # axis indices resolve. ("rows", arr) carries fresh rows
+                # (cached for next time); ("keep",) means the head's
+                # content hash matched what it last shipped for this
+                # exact range — rollback keeps the cached copy pristine,
+                # so reuse is byte-exact
+                if wire[0] == "keep":
+                    rows = self.sliced_rows.get((bid, name, lo, hi))
+                    if rows is None:
+                        # stale head record (restart/drop): the marker
+                        # makes the head reset it and re-ship in full
+                        raise KeyError(f"rows-missing:{bid}")
+                else:
+                    rows = wire[1]
+                    self.sliced_rows[(bid, name, lo, hi)] = rows
+                    accel.remember(rows)
+                cellmap[name].cell_contents = rebase_chunk(rows, lo)
             if spans is not None:
                 spans.append(("deserialize", t0, t1, None))
                 spans.append(("restore", t1, time.perf_counter(), None))
             self.chunks_run += 1
-            return _chunk_updates(body, lo, spec["hi"],
+            return _chunk_updates(body, lo, hi,
                                   tuple(spec.get("written") or ()),
                                   spans)
         fn = loads_fn(spec["fn_blob"])
@@ -286,13 +310,17 @@ def worker_main(conn, wid: Optional[int] = None, sim_gpu: bool = False,
                 # and re-run as np)
                 ran = (spec.get("backend", "np")
                        if spec["kind"] == "chunk" else None)
+                # chunk dones also carry the accel counter deltas
+                # (jit hits/recompiles, residency) for head aggregation
+                wstats = (accel.take_stats()
+                          if spec["kind"] == "chunk" else None)
                 if spec.get("gather") or nbytes <= INLINE_MAX:
                     link.send(("done", tid, oid, nbytes, ("v", result),
-                               ran, spans))
+                               ran, spans, wstats))
                 else:
                     state.objects[oid] = result
                     link.send(("done", tid, oid, nbytes, None, ran,
-                               spans))
+                               spans, wstats))
             elif kind == "blob":
                 _, bid, skeleton, delta = msg
                 state.update_blob(bid, skeleton, delta)

@@ -365,6 +365,224 @@ def test_mixed_fleet_survives_worker_kill():
 
 
 # ---------------------------------------------------------------------------
+# accelerated hetero path: jitted twins, residency, row-skip, pipelining
+# ---------------------------------------------------------------------------
+
+def test_codegen_emits_jit_iteration_fast_path():
+    """The jnp twin leads with a per-iteration function handed to
+    ``__pfor_jit`` (vmap + jit + scatter); its eager loop stays as the
+    fallback below the dispatch."""
+    ck = compile_kernel(hetero_kernel)
+    src = ck.source("np")
+    assert "def __pfor_iter_0(" in src
+    assert "if __pfor_jit(__pfor_iter_0, __lo, __hi" in src
+    # the sequential convergence loop compiles to a fori_loop carry
+    assert "__jax.lax.fori_loop(" in src
+    assert ck.stats().get("pfor_jit_units") == 1
+
+
+def test_jit_iter_matches_eager_twin_inprocess():
+    """The vmapped compiled path and the eager twin loop produce the
+    same rows; the second call hits the compiled-executable cache."""
+    from repro.distrib import accel
+
+    accel.reset()
+    bodies = {}
+
+    class FakeRT:
+        def pfor_shards(self, body, lo, hi, tile, **kw):
+            bodies["jnp"] = body.__jnp__
+            body.__jnp__(lo, hi)
+
+        def distribute_profitable(self, *a, **k):
+            return True
+
+    ck = compile_kernel(hetero_kernel, runtime=FakeRT())
+    ck.pfor_config.distribute_threshold = 0
+    x, y, _ = _make_data(N, M)
+    ref = _reference(x, y, N, M, ITERS)
+    try:
+        out = np.zeros(N)
+        ck.call_variant("np", x, y, out, N, M, ITERS)
+        assert np.allclose(out, ref, atol=1e-8)
+        st = accel.stats()
+        assert st.get("jit_recompiles", 0) == 1
+        assert st.get("jit_fallbacks", 0) == 0
+        out2 = np.zeros(N)
+        ck.call_variant("np", x, y, out2, N, M, ITERS)
+        assert np.allclose(out2, ref, atol=1e-8)
+        st = accel.stats()
+        assert st.get("jit_recompiles", 0) == 1   # no new compilation
+        assert st.get("jit_hits", 0) >= 1
+    finally:
+        accel.reset()
+
+
+def test_jit_disabled_by_env_falls_back_to_eager(monkeypatch):
+    from repro.distrib import accel
+
+    accel.reset()
+    monkeypatch.setenv("REPRO_DISTRIB_JIT", "0")
+
+    class FakeRT:
+        def pfor_shards(self, body, lo, hi, tile, **kw):
+            body.__jnp__(lo, hi)
+
+        def distribute_profitable(self, *a, **k):
+            return True
+
+    ck = compile_kernel(hetero_kernel, runtime=FakeRT())
+    ck.pfor_config.distribute_threshold = 0
+    x, y, _ = _make_data(N, M)
+    ref = _reference(x, y, N, M, ITERS)
+    try:
+        out = np.zeros(N)
+        ck.call_variant("np", x, y, out, N, M, ITERS)
+        assert np.allclose(out, ref, atol=1e-8)
+        st = accel.stats()
+        assert st.get("jit_recompiles", 0) == 0
+        assert st.get("jit_hits", 0) == 0
+    finally:
+        accel.reset()
+
+
+def test_resident_arrays_skip_restaging():
+    """remember()-ed arrays stage to the device once; later pfor_jit
+    calls over the same buffers are residency hits, including through a
+    fresh re-based chunk view of the same rows array."""
+    from repro.distrib import accel
+    from repro.distrib.serial import rebase_chunk
+
+    accel.reset()
+    rows = np.arange(12.0).reshape(4, 3)
+    accel.remember(rows)
+
+    def iter_fn(g, __offs, a):
+        row = a[g - __offs[0]]
+        return (row * 2.0,)
+
+    out = rebase_chunk(rows.copy(), 0)
+    try:
+        assert accel.pfor_jit(iter_fn, 0, 4, (rebase_chunk(rows, 0),),
+                              (0,)) is True
+        st = accel.stats()
+        first_stages = st.get("resident_stages", 0)
+        assert st.get("resident_cells", 0) >= 1
+        # a *new* view object over the same cached rows buffer must hit
+        assert accel.pfor_jit(iter_fn, 0, 4, (rebase_chunk(rows, 0),),
+                              (0,)) is True
+        st = accel.stats()
+        assert st.get("resident_hits", 0) >= 1
+        assert st.get("resident_stages", 0) == first_stages
+    finally:
+        accel.reset()
+    del out
+
+
+def test_serving_loop_reaches_steady_state_telemetry():
+    """Three serving-loop calls on a posed-GPU fleet: after the first,
+    zero new XLA compilations, device residency hits, and chunk rows
+    skipped (the head's content hash matched) — with exact results."""
+    x, y, _ = _make_data(N, M)
+    ref = _reference(x, y, N, M, ITERS)
+    ck = compile_kernel(hetero_kernel)
+    rt = ClusterRuntime(workers=2, sim_gpu_workers=(0, 1))
+    try:
+        ck.pfor_config.runtime = rt
+        ck.pfor_config.workers = 2
+        ck.pfor_config.distribute_threshold = 0
+        seen = []
+        for _ in range(3):
+            out = np.zeros(N)
+            ck.call_variant("np", x, y, out, N, M, ITERS)
+            assert np.allclose(out, ref, atol=1e-8)
+            seen.append(rt.stats())
+        assert seen[0]["jit_recompiles"] > 0
+        # steady state: the compiled executable is reused verbatim
+        assert seen[2]["jit_recompiles"] == seen[0]["jit_recompiles"]
+        assert seen[2]["jit_hits"] > seen[0]["jit_hits"]
+        assert seen[2]["jit_fallbacks"] == 0
+        # device residency: later calls reuse staged arrays
+        assert seen[2]["resident_hits"] > seen[0]["resident_hits"]
+        assert seen[2]["resident_stages"] == seen[0]["resident_stages"]
+        # unchanged chunk rows ride the ("keep",) marker, not the wire
+        assert seen[2]["rows_skipped"] > 0
+        assert seen[2]["bytes_saved_rows"] > 0
+    finally:
+        rt.shutdown()
+        ck.pfor_config.runtime = None
+
+
+def test_pipelined_rounds_match_synchronous_bitwise():
+    """pipeline_depth=2 (sub-chunked, as-completed gather) must produce
+    bitwise-identical arrays to the depth-1 synchronous round — pfor
+    chunks write disjoint regions, so merge order cannot matter."""
+    x, y, _ = _make_data(N, M)
+    outs = {}
+    for depth in (1, 2):
+        ck = compile_kernel(hetero_kernel)
+        rt = ClusterRuntime(workers=2, sim_gpu_workers=(1,),
+                            pipeline_depth=depth)
+        try:
+            ck.pfor_config.runtime = rt
+            ck.pfor_config.workers = 2
+            ck.pfor_config.distribute_threshold = 0
+            out = np.zeros(N)
+            ck.call_variant("np", x, y, out, N, M, ITERS)
+            outs[depth] = out
+            st = rt.stats()
+            assert st["pipeline_depth"] == depth
+            if depth > 1:
+                # each worker share split into `depth` sub-chunks
+                assert st["chunks_dispatched"] >= 2 * 2
+                assert "overlap_s" in rt.phase_breakdown()
+        finally:
+            rt.shutdown()
+            ck.pfor_config.runtime = None
+    assert np.array_equal(outs[1], outs[2]), \
+        "pipelined gather diverged from synchronous round"
+
+
+def test_np_only_knob_suppresses_twin_routing():
+    """np_only=True is the control arm for speedup comparisons: same
+    fleet, no jnp chunks, same results."""
+    x, y, _ = _make_data(N, M)
+    ref = _reference(x, y, N, M, ITERS)
+    ck = compile_kernel(hetero_kernel)
+    rt = ClusterRuntime(workers=2, sim_gpu_workers=(0, 1), np_only=True)
+    try:
+        ck.pfor_config.runtime = rt
+        ck.pfor_config.workers = 2
+        ck.pfor_config.distribute_threshold = 0
+        out = np.zeros(N)
+        ck.call_variant("np", x, y, out, N, M, ITERS)
+        assert np.allclose(out, ref, atol=1e-8)
+        st = rt.stats()
+        assert st["gpu_chunks"] == 0 and st["cpu_chunks"] > 0
+        assert set(st["chunks_executed"]) == {"np"}
+    finally:
+        rt.shutdown()
+        ck.pfor_config.runtime = None
+
+
+def test_gpu_probe_error_lands_on_profile(monkeypatch):
+    """A failing GPU probe must report *why* instead of silently posing
+    as a bare CPU (the head counts the reason in its faults scope)."""
+    monkeypatch.setenv("REPRO_DISTRIB_PROBE_GPU", "1")
+
+    def boom():
+        raise RuntimeError("driver exploded")
+
+    monkeypatch.setattr(jax, "devices", boom)
+    p = measure_profile(0, sim_gpu=False)
+    assert "driver exploded" in p.gpu_probe_error
+    assert not p.has_gpu
+    # the reason survives the hello-message dict roundtrip
+    assert DeviceProfile.from_dict(
+        p.as_dict()).gpu_probe_error == p.gpu_probe_error
+
+
+# ---------------------------------------------------------------------------
 # tracked flaky: recv/send racing a connection close
 # ---------------------------------------------------------------------------
 
