@@ -30,6 +30,7 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+from . import backends as backends_mod
 from . import tir
 from .isl_lite import Affine, LoopDim
 from .raising import (EinsumSpec, Hull, MaskOperand, RaiseError, WritePlan,
@@ -96,6 +97,11 @@ class EmitMeta:
     # per-iteration function wired through __pfor_jit (compiled path);
     # the exec namespace must additionally bind __jax and __pfor_jit
     pfor_jit_units: List[int] = field(default_factory=list)
+    # backend name → pfor unit indices that got that backend's twin
+    # (registry-driven; pfor_jnp_units is kept as the jnp projection so
+    # pre-registry cache entries and telemetry keep working). The exec
+    # namespace must merge each listed backend's namespace() bindings.
+    pfor_twin_units: Dict[str, List[int]] = field(default_factory=dict)
 
 
 class Emitter:
@@ -874,14 +880,23 @@ class Emitter:
         # of the kernel a chunk belongs to
         self.w(f"{body_name}.__unit__ = {idx}")
         if self.pfor_jnp and getattr(u, "jnp_feasible", True):
-            jnp_name = self._try_emit_jnp_twin(u, body_name, idx,
-                                               pending_before)
-            if jnp_name is not None:
-                self.w(f"{jnp_name}.__sliceable__ = {sliceable!r}")
-                self.w(f"{jnp_name}.__backend__ = 'jnp'")
-                self.w(f"{jnp_name}.__unit__ = {idx}")
-                self.w(f"{body_name}.__jnp__ = {jnp_name}")
-                self.meta.pfor_jnp_units.append(idx)
+            # one twin per registered accelerator-feasible backend, in
+            # registration order (jnp first keeps emitted source
+            # byte-identical to the pre-registry pair for units no
+            # other backend matches)
+            for bk in backends_mod.twin_backends():
+                twin_name = bk.emit_twin(self, u, body_name, idx,
+                                         pending_before)
+                if twin_name is None:
+                    continue
+                self.w(f"{twin_name}.__sliceable__ = {sliceable!r}")
+                self.w(f"{twin_name}.__backend__ = '{bk.name}'")
+                self.w(f"{twin_name}.__unit__ = {idx}")
+                self.w(f"{body_name}.{bk.attr} = {twin_name}")
+                self.meta.pfor_twin_units.setdefault(
+                    bk.name, []).append(idx)
+                if bk.name == "jnp":
+                    self.meta.pfor_jnp_units.append(idx)
         tile = u.tile if u.tile is not None else "None"
         self.w(f"__pfor_run({body_name}, {affine_py(d.lower)}, "
                f"{affine_py(d.upper)}, {tile})")

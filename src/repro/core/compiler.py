@@ -41,7 +41,7 @@ from repro.profiler.hints import (synthesize_hint_tiers, synthesize_hints,
                                   type_signature)
 from repro.profiler.tracer import FunctionTrace, Tracer
 
-from . import codegen, cost, parser, schedule as schedule_mod, scop
+from . import backends, codegen, cost, parser, schedule as schedule_mod, scop
 from .multiversion import CompiledKernel, Variant
 from .pfor import PforConfig
 
@@ -100,24 +100,21 @@ def _jnp_module():
 def _make_np_variant(gen_np: codegen.GeneratedVariant,
                      pfor_cfg: PforConfig) -> Variant:
     extra = {"__pfor_run": pfor_cfg.make_runner()}
-    if getattr(gen_np.meta, "pfor_jnp_units", None):
-        # hybrid variant: pfor bodies carry jnp twins computing through
-        # __jxp — the namespace must bind it before any body runs
-        jnp = _jnp_module()
-        if jnp is None:
+    # hybrid variant: pfor bodies carry per-backend twins — each
+    # recorded backend contributes its exec-namespace bindings (__jxp,
+    # __pfor_jit, __plk, …) via its registry hook. Entries predating
+    # the registry recorded jnp twins only (pfor_jnp_units).
+    twin_units = dict(getattr(gen_np.meta, "pfor_twin_units", None) or {})
+    if not twin_units and getattr(gen_np.meta, "pfor_jnp_units", None):
+        twin_units = {"jnp": list(gen_np.meta.pfor_jnp_units)}
+    for bname in twin_units:
+        try:
+            bk = backends.get(bname)
+        except KeyError:
             raise codegen.EmitError(
-                "hybrid np variant references jax, which is unavailable")
-        extra["__jxp"] = jnp
-        if getattr(gen_np.meta, "pfor_jit_units", None):
-            # twin bodies lead with the compiled per-iteration path:
-            # bind jax (lax.fori_loop in emitted code) and the
-            # vmap/jit/residency runner
-            import jax
-
-            from repro.distrib.accel import pfor_jit
-
-            extra["__jax"] = jax
-            extra["__pfor_jit"] = pfor_jit
+                f"variant references unregistered backend {bname!r}")
+        if bk.namespace is not None:
+            extra.update(bk.namespace(gen_np.meta))
     np_fn = _exec_variant(gen_np, np, extra)
     return Variant("np", np_fn, gen_np)
 
@@ -160,17 +157,19 @@ def compile_kernel(
     # backend tag carries every option that changes the *generated code*
     # (schedule shape included); runtime knobs (tile/workers/thresholds)
     # live in PforConfig / dispatch state rebuilt fresh on every load.
-    # "jnpu" = per-unit jnp twins inside pfor bodies — a new token so
-    # pre-hetero cache entries (np-only bodies) miss instead of serving
-    # stale code. The token is earned only when jax is *actually*
-    # importable: a twin-less compile on a jax-less host files under the
-    # legacy "np+jnp" tag, so installing jax later recompiles with twins
+    # The token is registry-derived (sorted backend tags, each carrying
+    # its codegen version): registering a backend or bumping a
+    # backend's codegen_version re-keys the cache, so entries generated
+    # with an older twin set miss into a recompile instead of serving
+    # stale code. Twin tags are earned only when jax is *actually*
+    # importable: a twin-less compile on a jax-less host files under
+    # the np-only token, so installing jax later recompiles with twins
     # instead of serving the twin-less entry forever. The probe costs a
     # one-time jax import per process (already paid by any non-pfor
     # kernel's whole-jnp variant).
     jax_ok = enable_jax and _jnp_module() is not None
-    backend_tag = (("np+jnpu" if jax_ok else "np+jnp")
-                   if enable_jax else "np") \
+    backend_tag = backends.cache_token(jax_ok) \
+        + ("" if enable_jax else ":nojax") \
         + (":dist" if distribute else ":nodist") \
         + (":fuse" if fuse else ":nofuse")
     src_h = type_sig = None

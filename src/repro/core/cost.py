@@ -12,6 +12,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, Iterable, List, Optional, Tuple
 
+from . import backends
 from .isl_lite import Affine, Domain, LoopDim
 from .schedule import (FFTUnit, OpaqueUnit, PforUnit, RaisedUnit, Schedule,
                        SeqLoopUnit, Unit)
@@ -154,12 +155,14 @@ DISTRIBUTE_FLOP_THRESHOLD = 1e7
 
 # Per-chunk accelerator launch overhead on a worker (host→device staging
 # + kernel dispatch for the jnp twin of a pfor body); conservative so
-# tiny chunks stay on the np body.
-GPU_CHUNK_OVERHEAD_S = 5e-3
+# tiny chunks stay on the np body. Owned by the backend registry (each
+# backend's cost profile rides its registration); re-exported here for
+# call sites that read the constants.
+GPU_CHUNK_OVERHEAD_S = backends.GPU_CHUNK_OVERHEAD_S
 
 # Host↔device staging bandwidth fallback when the profile carries no
 # measured number (PCIe-gen3-ish, in GB/s).
-GPU_XFER_GBS = 12.0
+GPU_XFER_GBS = backends.GPU_XFER_GBS
 
 # Fixed per-task cost of dispatching one chunk to a worker process
 # (serialize + pipe + schedule); measured on the container's pipes.
@@ -236,71 +239,72 @@ def chunk_backend_seconds(flops: float, nbytes: float, profile,
     launch overhead. This is the cell of the (unit, backend, worker)
     table the cluster prices instead of one kernel-level threshold.
 
-    A *simulated* GPU (``gpu_kind == "sim"``: jax-CPU posing for
-    laptops/CI) prices like an integrated accelerator — no staging
-    overhead, memory bandwidth as the transfer term — so CI-sized
-    problems still exercise heterogeneous routing; real devices price
-    with the staging bandwidth the device probe *measured* (``h2d_gbs``
-    / ``d2h_gbs`` on the profile), falling back to the PCIe-ish
-    constant only when no measurement exists."""
-    if backend == "jnp":
-        rate = max(1e-3, getattr(profile, "gpu_gflops", 0.0))
-        if getattr(profile, "gpu_kind", "") == "sim":
-            xfer_gbs = max(1e-3, getattr(profile, "membw_gbs", 1.0))
-            overhead = 0.0
-        else:
-            # a chunk stages inputs in and gathers writes out, so the
-            # slower direction bounds the transfer term
-            h2d = getattr(profile, "h2d_gbs", 0.0) or 0.0
-            d2h = getattr(profile, "d2h_gbs", 0.0) or 0.0
-            measured = min(b for b in (h2d, d2h) if b > 0) \
-                if (h2d > 0 or d2h > 0) else 0.0
-            xfer_gbs = measured if measured > 0 else GPU_XFER_GBS
-            overhead = GPU_CHUNK_OVERHEAD_S
-    else:
-        rate = max(1e-3, getattr(profile, "gflops", 1.0))
-        xfer_gbs = max(1e-3, getattr(profile, "membw_gbs", 1.0))
-        overhead = 0.0
-    return max(flops / (rate * 1e9),
-               nbytes / (xfer_gbs * 1e9)) + overhead
+    The formula is the backend's own ``chunk_seconds`` cost profile
+    (:mod:`repro.core.backends`): np prices against host gflops/membw,
+    jnp against the (real or simulated) GPU with staging bandwidth the
+    device probe measured, pallas like jnp with both roofline terms
+    scaled by its fused-kernel speedup."""
+    bk = backends.get(backend)
+    if bk.chunk_seconds is None:  # pragma: no cover — registry contract
+        raise ValueError(f"backend {backend!r} has no cost profile")
+    return bk.chunk_seconds(flops, nbytes, profile)
+
+
+def _feasible(bk, profile) -> bool:
+    return bk.feasible is None or bk.feasible(profile)
 
 
 def pick_chunk_backend(flops: float, nbytes: float, profile,
-                       allow_jnp: bool = True) -> str:
-    """Choose the cheaper body backend for one worker's chunk.
+                       allow_jnp: bool = True,
+                       candidates: Optional[Tuple[str, ...]] = None) -> str:
+    """Choose the cheapest body backend for one worker's chunk.
 
-    Only workers with a (real or simulated) GPU ever run the jnp twin;
-    for them the decision is the priced two-sided estimate. A zero FLOP
-    estimate (direct calls that bypassed the dispatcher) degrades to
-    capability tags: a GPU worker takes the jnp body when one exists."""
-    if (not allow_jnp or not getattr(profile, "has_gpu", False)
-            or getattr(profile, "gpu_gflops", 0.0) <= 0):
+    ``candidates`` are the twin backends whose bodies actually exist for
+    the unit (None keeps the legacy jnp-or-np contract). Only workers
+    the backend declares itself feasible on (e.g. a real or simulated
+    GPU) are priced against it; a zero FLOP estimate (direct calls that
+    bypassed the dispatcher) degrades to capability tags — the
+    highest-priority feasible candidate wins. Ties price to np: a twin
+    must be *strictly* cheaper to leave the always-correct body."""
+    if candidates is None:
+        candidates = ("jnp",) if allow_jnp else ()
+    live = [backends.get(c) for c in candidates
+            if backends.is_registered(c)]
+    live = [bk for bk in live if _feasible(bk, profile)]
+    if not live:
         return "np"
+    live.sort(key=lambda bk: -bk.priority)
     if flops <= 0:
-        return "jnp"
-    t_jnp = chunk_backend_seconds(flops, nbytes, profile, "jnp")
+        return live[0].name
     t_np = chunk_backend_seconds(flops, nbytes, profile, "np")
-    return "jnp" if t_jnp < t_np else "np"
+    best, best_t = "np", t_np
+    for bk in live:
+        t = bk.chunk_seconds(flops, nbytes, profile)
+        if t < best_t:
+            best, best_t = bk.name, t
+    return best
 
 
 def unit_backend_table(flops_per_worker: float, nbytes_per_worker: float,
-                       profiles: Iterable, allow_jnp: bool = True
+                       profiles: Iterable, allow_jnp: bool = True,
+                       candidates: Optional[Tuple[str, ...]] = None
                        ) -> List[str]:
     """Backend choice per worker profile for one pfor unit (in profile
     order) — the row of the (unit, backend, worker) pricing table the
     sharder consumes."""
     return [pick_chunk_backend(flops_per_worker, nbytes_per_worker, p,
-                               allow_jnp)
+                               allow_jnp, candidates)
             for p in profiles]
 
 
 def backend_effective_gflops(profile, backend: str) -> float:
     """Throughput of ``profile`` when running its chosen backend — the
-    chunk-sizing weight for heterogeneous fleets (a GPU worker on the
-    jnp body earns a proportionally larger chunk)."""
-    if backend == "jnp":
-        return max(1e-3, getattr(profile, "gpu_gflops", 0.0))
-    return max(1e-3, getattr(profile, "gflops", 1.0))
+    chunk-sizing weight for heterogeneous fleets (a GPU worker on an
+    accelerator body earns a proportionally larger chunk)."""
+    bk = backends.get(backend)
+    if bk.effective_gflops is None:  # pragma: no cover
+        return max(1e-3, getattr(profile, "gflops", 1.0))
+    return bk.effective_gflops(profile)
 
 
 def calibrate_accel_threshold(

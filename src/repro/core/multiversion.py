@@ -316,6 +316,8 @@ class CompiledKernel:
                 getattr(fusion, "contracted_arrays", ()) or ()),
             "pfor_jnp_units": len(self.pfor_jnp_units()),
             "pfor_jit_units": len(self.pfor_jit_units()),
+            "pfor_twin_units": {name: len(units) for name, units
+                                in self.pfor_twin_units().items()},
             "from_cache": self.from_cache,
         }
 
@@ -336,6 +338,20 @@ class CompiledKernel:
         if v is None or v.generated is None:
             return []
         return list(getattr(v.generated.meta, "pfor_jit_units", ()) or ())
+
+    def pfor_twin_units(self) -> Dict[str, List[int]]:
+        """Backend name → pfor unit indices carrying that backend's twin
+        (registry-driven superset of :meth:`pfor_jnp_units`). Entries
+        generated before the registry recorded jnp twins only; they
+        project through unchanged."""
+        v = self.variants.get("np")
+        if v is None or v.generated is None:
+            return {}
+        twins = getattr(v.generated.meta, "pfor_twin_units", None)
+        if twins:
+            return {name: list(units) for name, units in twins.items()}
+        jnp_units = self.pfor_jnp_units()
+        return {"jnp": jnp_units} if jnp_units else {}
 
     def call_variant(self, name: str, *args, **kwargs):
         """Force a specific variant (benchmark harness hook)."""
@@ -389,11 +405,11 @@ class CompiledKernel:
             lines.append(
                 f"  fusion: {fusion.fused_units} fused unit(s), "
                 f"contracted {list(fusion.contracted_arrays)}")
-        jnp_units = self.pfor_jnp_units()
-        if jnp_units:
+        twin_units = self.pfor_twin_units()
+        for bname, units in twin_units.items():
             lines.append(
-                f"  hetero: pfor unit(s) {jnp_units} carry jnp twin "
-                "bodies — the cluster prices np-vs-jnp per worker "
+                f"  hetero: pfor unit(s) {units} carry {bname} twin "
+                "bodies — the cluster prices the backends per worker "
                 "profile and routes chunks by device_pref")
         for name, v in self.variants.items():
             ops = (v.generated.meta.raised_ops if v.generated else [])

@@ -34,7 +34,18 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["pfor_jit", "remember", "take_stats", "stats", "reset"]
+__all__ = ["pfor_jit", "remember", "take_stats", "stats", "reset",
+           "WIRE_STAT_KEYS"]
+
+# Every counter key a worker may piggyback on a chunk "done" message —
+# this module's jit/residency counters plus the pallas runtime's call
+# counters (repro.kernels.api, drained the same way). The cluster's
+# head-side aggregation derives its key set from this tuple, so adding
+# a worker-side counter is a one-place change.
+WIRE_STAT_KEYS = ("jit_hits", "jit_recompiles", "jit_fallbacks",
+                  "jit_compile_s", "resident_hits", "resident_stages",
+                  "resident_cells", "pallas_calls",
+                  "pallas_interpret_calls")
 
 # scalar types a closure cell may hold and still be baked into the
 # compile-cache key (anything else → eager fallback)

@@ -44,6 +44,9 @@ import numpy as np
 
 from repro import obs
 
+from repro.core import backends as backends_mod
+
+from .accel import WIRE_STAT_KEYS as accel_wire_stat_keys
 from .chaos import ChaosPlan, ChaosWire
 from .device import DeviceProfile, measure_profile, sim_gpu_for
 from .objects import (HEAD, LOST, REMOTE, ClusterRef, ObjectPlane,
@@ -246,6 +249,10 @@ class ClusterRuntime:
     bytes_shipped = obs.MetricAttr("bytes_shipped")
     gpu_chunks = obs.MetricAttr("gpu_chunks")
     cpu_chunks = obs.MetricAttr("cpu_chunks")
+    # chunks shipped with a pallas-lowered body, and chunks that fell
+    # off the pallas step of a TaskSpec.alt degradation chain
+    pallas_chunks = obs.MetricAttr("pallas_chunks")
+    pallas_fallbacks = obs.MetricAttr("pallas_fallbacks")
     sliced_args = obs.MetricAttr("sliced_args")
     bytes_saved_sliced = obs.MetricAttr("bytes_saved_sliced")
     blob_hits = obs.MetricAttr("blob_hits")
@@ -262,11 +269,13 @@ class ClusterRuntime:
     resident_hits = obs.MetricAttr("resident_hits")
     resident_stages = obs.MetricAttr("resident_stages")
     resident_cells = obs.MetricAttr("resident_cells")
+    pallas_calls = obs.MetricAttr("pallas_calls")
+    pallas_interpret_calls = obs.MetricAttr("pallas_interpret_calls")
 
     # keys of the per-chunk accel stats dict the head aggregates
-    _ACCEL_KEYS = ("jit_hits", "jit_recompiles", "jit_fallbacks",
-                   "jit_compile_s", "resident_hits", "resident_stages",
-                   "resident_cells")
+    # (declared by the accel module so worker-side counters — jit,
+    # residency, pallas kernel calls — stay a one-place change)
+    _ACCEL_KEYS = accel_wire_stat_keys
 
     def __init__(self, workers: int = 2, *,
                  start_method: Optional[str] = None,
@@ -1002,16 +1011,28 @@ class ClusterRuntime:
                 ts.finished = True
                 ts.event.set()
 
-    @staticmethod
-    def _maybe_downgrade_backend(spec: TaskSpec) -> None:
-        """A chunk that *errored* on a worker retries on the np fallback
-        body when it was running an accelerator twin — a worker whose
-        jax is broken/missing must not burn every attempt on it."""
-        if spec.kind == "chunk" and spec.backend != "np" \
-                and spec.alt is not None:
-            spec.backend, spec.blob_id, spec.parts = spec.alt
-            spec.alt = None
-            spec.device_pref = "cpu"
+    def _maybe_downgrade_backend(self, spec: TaskSpec) -> None:
+        """A chunk that *errored* on a worker retries one step down its
+        ``TaskSpec.alt`` degradation chain (registry-ordered, e.g.
+        pallas → jnp → np) — a worker whose accelerator runtime is
+        broken/missing, or a pallas lowering that fails at run time,
+        must not burn every attempt on the same body.
+
+        ``alt`` holds either a tuple of ``(backend, blob_id, parts)``
+        steps (registry chains) or a single such triple (pre-registry
+        single-step form, still accepted)."""
+        if spec.kind != "chunk" or spec.backend == "np" \
+                or spec.alt is None:
+            return
+        if spec.backend == "pallas":
+            self.pallas_fallbacks += 1
+        steps = spec.alt if isinstance(spec.alt[0], tuple) \
+            else (spec.alt,)
+        spec.backend, spec.blob_id, spec.parts = steps[0]
+        rest = tuple(steps[1:])
+        spec.alt = rest if rest else None
+        spec.device_pref = backends_mod.get(spec.backend).device_pref \
+            if backends_mod.is_registered(spec.backend) else "cpu"
 
     # -- placement + dispatch ---------------------------------------------
     def _views(self) -> List[WorkerView]:
@@ -1116,10 +1137,12 @@ class ClusterRuntime:
         worker-death resubmit re-ships for real and re-counts). The
         per-arg sliced counters live in :meth:`_wire_spec`, where the
         ship-vs-keep decision is made."""
-        if spec.backend == "jnp":
-            self.gpu_chunks += 1
-        else:
+        if spec.backend == "np":
             self.cpu_chunks += 1
+        else:
+            self.gpu_chunks += 1
+            if spec.backend == "pallas":
+                self.pallas_chunks += 1
 
     def _wire_spec(self, spec: TaskSpec, wh: _WorkerHandle) -> Dict:
         """Encode a task for the wire, resolving every ref arg so the
@@ -1169,13 +1192,19 @@ class ClusterRuntime:
             # rollback keeps them byte-exact)
             sliced_wire = {}
             for nm in spec.sliced:
-                rows = parts.sliced[nm][spec.lo:spec.hi]
+                arr = parts.sliced.get(nm)
+                if arr is None:
+                    # ``spec.sliced`` is the round-level union from the
+                    # np body; a twin capturing fewer arrays (a fused
+                    # pallas call, a degraded-away backend) has nothing
+                    # to ship for the rest
+                    continue
+                rows = arr[spec.lo:spec.hi]
                 rb = int(rows.nbytes)
                 h = hashlib.sha256(rows.tobytes()).hexdigest()
                 rk = (spec.blob_id, nm, spec.lo, spec.hi)
                 self.sliced_args += 1
-                self.bytes_saved_sliced += \
-                    int(parts.sliced[nm].nbytes) - rb
+                self.bytes_saved_sliced += int(arr.nbytes) - rb
                 with wh.send_lock:
                     keep = wh.sliced_rows.get(rk) == h
                     if not keep:
@@ -1573,16 +1602,18 @@ class ClusterRuntime:
         the head's live arrays — pfor iterations write disjoint regions,
         so the merge needs no conflict resolution.
 
-        Heterogeneous routing: when the body carries a jnp twin
-        (``body.__jnp__``, emitted per pfor unit by codegen), each
-        worker's backend is priced from its device profile
-        (:func:`repro.core.cost.pick_chunk_backend` over ``est_flops``
-        and the payload bytes), chunks are sized by the *chosen-backend*
-        throughput, and placement routes them via ``device_pref`` — so a
-        mixed fleet runs GPU workers on the jnp body and CPU workers on
-        the np body of the same pfor, gathered into one result. Both
-        bodies share the content-addressed cell store, so serving-loop
-        blob reuse survives backend tagging."""
+        Heterogeneous routing: when the body carries registered-backend
+        twins (``body.__jnp__``/``body.__pallas__``/…, emitted per pfor
+        unit by codegen), each worker's backend is priced from its
+        device profile (:func:`repro.core.cost.pick_chunk_backend` over
+        ``est_flops`` and the payload bytes, candidates = the twins
+        that actually exist), chunks are sized by the *chosen-backend*
+        throughput, and placement routes them via the backend's
+        ``device_pref`` — so a mixed fleet runs GPU workers on an
+        accelerator body and CPU workers on the np body of the same
+        pfor, gathered into one result. All bodies share the
+        content-addressed cell store, so serving-loop blob reuse
+        survives backend tagging."""
         n = hi - lo
         if n <= 0:
             return
@@ -1600,10 +1631,14 @@ class ClusterRuntime:
             if nm in arrays and arrays[nm].ndim >= 1
             and lo >= 0 and arrays[nm].shape[0] >= hi)
         bodies = {"np": body}
-        jnp_body = (None if self.np_only
-                    else getattr(body, "__jnp__", None))
-        if jnp_body is not None:
-            bodies["jnp"] = jnp_body
+        if not self.np_only:
+            # codegen stamps each registered backend's twin onto the np
+            # body under the backend's attr (__jnp__, __pallas__, …)
+            for bk_obj in backends_mod.twin_backends():
+                twin = getattr(body, bk_obj.attr, None)
+                if twin is not None:
+                    bodies[bk_obj.name] = twin
+        candidates = tuple(b for b in bodies if b != "np")
         t_split0 = time.perf_counter()
         parts_by = split_fn_variants(bodies, slice_names)
         t_split1 = time.perf_counter()
@@ -1640,14 +1675,17 @@ class ClusterRuntime:
         backends = cost_model.unit_backend_table(
             est_flops / len(views), per_bytes,
             [v.profile for v in views],
-            allow_jnp=jnp_body is not None)
-        hetero = len(set(backends)) > 1 or (jnp_body is not None
-                                            and "jnp" in backends)
-        # register every blob this run may use ("np" always: it is the
-        # error-path fallback for jnp chunks); workers receive a blob
-        # only when a chunk referencing it is dispatched to them
-        bids = {bk: self._blob_for(parts_by[bk])
-                for bk in sorted(set(backends) | {"np"})}
+            allow_jnp=bool(candidates), candidates=candidates)
+        hetero = any(b != "np" for b in backends)
+        # register every blob this run may use: the chosen backends
+        # plus each one's degradation-chain members ("np" always — it
+        # is the terminal fallback); workers receive a blob only when a
+        # chunk referencing it is dispatched to them
+        need = set(backends) | {"np"}
+        for bk in tuple(need):
+            need.update(b for b in backends_mod.degradation_chain(bk)
+                        if b in bodies)
+        bids = {bk: self._blob_for(parts_by[bk]) for bk in sorted(need)}
         if tile:
             ranges = [range(t, min(t + tile, hi))
                       for t in range(lo, hi, tile)]
@@ -1717,7 +1755,11 @@ class ClusterRuntime:
             out = self.plane.new_ref(tid)
             alt = None
             if bk != "np":
-                alt = ("np", bids["np"], parts_by["np"])
+                # registry-ordered degradation chain (pallas → jnp →
+                # np): each erroring attempt pops one step off
+                chain = [b for b in backends_mod.degradation_chain(bk)
+                         if b in bodies]
+                alt = tuple((b, bids[b], parts_by[b]) for b in chain)
             spec = TaskSpec(tid, "chunk", None, (), out,
                             blob_id=bids[bk],
                             lo=r.start, hi=r.stop,
@@ -1725,8 +1767,9 @@ class ClusterRuntime:
                             sliced=slice_names, parts=parts_by[bk],
                             gather=True, backend=bk, alt=alt,
                             pref_wid=pw,
-                            device_pref=({"np": "cpu", "jnp": "gpu"}[bk]
-                                         if hetero else ""))
+                            device_pref=(
+                                backends_mod.get(bk).device_pref
+                                if hetero else ""))
             ts = _TaskState(spec, deadline_s=deadline_s)
             if tracing:
                 ts.span_meta = {"round": rid, "lo": r.start,
@@ -1946,6 +1989,8 @@ class ClusterRuntime:
             "bytes_shipped": self.bytes_shipped,
             "gpu_chunks": self.gpu_chunks,
             "cpu_chunks": self.cpu_chunks,
+            "pallas_chunks": self.pallas_chunks,
+            "pallas_fallbacks": self.pallas_fallbacks,
             "unit_backend": {k: dict(v)
                              for k, v in self.unit_backend.items()},
             "chunks_executed": dict(self.chunks_executed),
@@ -1964,6 +2009,8 @@ class ClusterRuntime:
             "resident_hits": self.resident_hits,
             "resident_stages": self.resident_stages,
             "resident_cells": self.resident_cells,
+            "pallas_calls": self.pallas_calls,
+            "pallas_interpret_calls": self.pallas_interpret_calls,
             "pipeline_depth": self.pipeline_depth,
             "cached_blobs": len(self._blob_cache),
             "chunks_executed_by_worker":

@@ -74,13 +74,17 @@ class TaskSpec:
     device_pref: str = ""           # '' | 'cpu' | 'gpu'
     est_flops: float = 0.0
     attempts: int = 0
-    # chunk: which body variant this spec executes ("np" | "jnp"); the
-    # hetero sharder prices the choice per worker profile
+    # chunk: which body variant this spec executes (a registered
+    # backend name — "np" | "jnp" | "pallas" | …); the hetero sharder
+    # prices the choice per worker profile
     backend: str = "np"
-    # chunk: (backend, blob_id, parts) of the np fallback body — a jnp
-    # chunk that *errors* on a worker (e.g. jax missing there) degrades
-    # to the np twin on resubmit instead of burning all its attempts
-    alt: Optional[Tuple[str, int, Any]] = None
+    # chunk: the degradation chain — a tuple of (backend, blob_id,
+    # parts) steps ordered by the registry (pallas → jnp → np). A chunk
+    # that *errors* on a worker (jax missing there, a pallas lowering
+    # failing at run time) pops one step on resubmit instead of burning
+    # all its attempts. A bare (backend, blob_id, parts) triple (the
+    # pre-registry single-step form) is still accepted.
+    alt: Optional[Tuple[Any, ...]] = None
     # chunk: the worker whose measured throughput this range was sized
     # for — a soft placement affinity, so proportional chunking stays
     # meaningful (without it, small pipelined sub-chunks all drain to

@@ -347,10 +347,22 @@ def split_fn_variants(bodies: Dict[str, Any],
                       ) -> Dict[str, ClosureParts]:
     """Backend → ClosureParts for the variant bodies of one pfor.
 
+    Backend names must be registered (:mod:`repro.core.backends`) — the
+    bodies dict is keyed by codegen's ``__backend__`` stamps, which the
+    registry produced, so an unknown key here means a mismatched or
+    hand-rolled body and is worth failing loudly over.
+
     Twin bodies are closures over the *same* enclosing scope, so their
     cells hold identical objects — each value is pickled and hashed once
     and the resulting content-addressed entries are shared across the
     per-backend parts (persistent-blob reuse survives backend tagging)."""
+    from repro.core import backends as _backends
+
+    unknown = [bk for bk in bodies if not _backends.is_registered(bk)]
+    if unknown:
+        raise ValueError(
+            f"unregistered backend name(s) {unknown} in variant bodies "
+            f"(registered: {_backends.names()})")
     memo: Dict[int, Tuple[bytes, str]] = {}
     return {bk: split_fn(fn, sliceable, backend=bk, _cell_memo=memo)
             for bk, fn in bodies.items()}

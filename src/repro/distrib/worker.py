@@ -51,6 +51,7 @@ clock offset and land the spans on one aligned timeline.
 from __future__ import annotations
 
 import pickle
+import sys
 import threading
 import time
 import traceback
@@ -311,9 +312,16 @@ def worker_main(conn, wid: Optional[int] = None, sim_gpu: bool = False,
                 ran = (spec.get("backend", "np")
                        if spec["kind"] == "chunk" else None)
                 # chunk dones also carry the accel counter deltas
-                # (jit hits/recompiles, residency) for head aggregation
+                # (jit hits/recompiles, residency — plus the pallas
+                # runtime's call counters when a pallas twin imported
+                # it; sys.modules avoids dragging jax into pure-np
+                # workers) for head aggregation
                 wstats = (accel.take_stats()
                           if spec["kind"] == "chunk" else None)
+                if wstats is not None:
+                    plk = sys.modules.get("repro.kernels.api")
+                    if plk is not None:
+                        wstats.update(plk.take_stats())
                 if spec.get("gather") or nbytes <= INLINE_MAX:
                     link.send(("done", tid, oid, nbytes, ("v", result),
                                ran, spans, wstats))

@@ -1,0 +1,161 @@
+"""Runtime surface of the pallas backend (bound as ``__plk`` in twins).
+
+The pattern matcher (:mod:`repro.core.patterns`) rewrites recognized
+pfor unit bodies onto these three entry points; generated pallas twins
+call them with plain numpy blocks and store the numpy result back into
+the captured (possibly chunk-sliced) arrays. Each wrapper adapts the
+matched shape onto the corresponding seed Pallas kernel:
+
+* :func:`matmul` — blocked matmul (``kernels/matmul``), ragged shapes
+  padded by the kernel's own dispatcher.
+* :func:`attention_rows` — unscaled-softmax row attention onto the
+  flash kernel (``kernels/flash_attention``): the kernel bakes in a
+  ``1/sqrt(d)`` score scale, so queries are pre-multiplied by
+  ``sqrt(d)`` to cancel it; block sizes are clamped to divisors because
+  the kernel refuses ragged tiles (zero-padding K would pollute the
+  softmax).
+* :func:`scan_rows` — first-order linear recurrence onto the selective
+  scan kernel (``kernels/mamba_scan``) via the identity mapping
+  ``dt=1, B=C=1 (N=1), a=log(-log(c))`` which requires ``0<c<1``; an
+  out-of-range coefficient raises, which the cluster counts as a
+  lowering failure and degrades down the ``TaskSpec.alt`` chain.
+
+On CPU-only hosts the kernels run in Pallas *interpret* mode, so CI
+exercises the full routing path; a real ``pallas_call`` lowering is
+used when ``REPRO_DISTRIB_PROBE_GPU=1`` and jax actually sees an
+accelerator. ``REPRO_PALLAS_CHAOS=fail`` makes every entry point raise
+(deterministic fallback-path tests).
+
+This module enables jax x64 itself: generated chunk bodies compute in
+the caller's (usually float64) dtype, and the serializer's x64 forcing
+only covers jax-prefixed module globals, which ``__plk`` is not.
+"""
+
+from __future__ import annotations
+
+import math
+import os
+from typing import Dict
+
+import numpy as np
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402  (after x64 so f64 survives)
+
+from .flash_attention.flash_attention import flash_attention_bhsd  # noqa: E402
+from .mamba_scan import ops as _mamba_ops  # noqa: E402
+from .matmul import ops as _matmul_ops  # noqa: E402
+
+_STATS: Dict[str, float] = {}
+
+
+def _bump(key: str, val: float = 1) -> None:
+    _STATS[key] = _STATS.get(key, 0) + val
+
+
+def stats() -> Dict[str, float]:
+    """Counters accumulated since the last :func:`take_stats`."""
+    return dict(_STATS)
+
+
+def take_stats() -> Dict[str, float]:
+    """Drain the counters; the worker piggybacks them on chunk ``done``
+    messages exactly like :func:`repro.distrib.accel.take_stats`."""
+    out = dict(_STATS)
+    _STATS.clear()
+    return out
+
+
+def reset() -> None:
+    _STATS.clear()
+
+
+def _use_interpret() -> bool:
+    """Interpret mode unless a real accelerator was probed *and* jax
+    actually sees one (mirrors the device layer's opt-in probe gate)."""
+    if os.environ.get("REPRO_DISTRIB_PROBE_GPU") != "1":
+        return True
+    return jax.default_backend() not in ("gpu", "tpu")
+
+
+def _chaos() -> None:
+    if os.environ.get("REPRO_PALLAS_CHAOS") == "fail":
+        raise RuntimeError("pallas-chaos")
+
+
+def _count(interpret: bool) -> None:
+    _bump("pallas_calls")
+    if interpret:
+        _bump("pallas_interpret_calls")
+
+
+def _div_block(n: int, pref: int) -> int:
+    """Largest block <= pref that divides n (kernels refuse ragged
+    tiles)."""
+    b = max(1, min(pref, n))
+    while n % b:
+        b -= 1
+    return b
+
+
+def matmul(a, b):
+    """``a @ b`` through the blocked Pallas matmul kernel."""
+    _chaos()
+    interpret = _use_interpret()
+    _count(interpret)
+    out = _matmul_ops.matmul(jnp.asarray(a), jnp.asarray(b),
+                             force_pallas=True, interpret=interpret)
+    return np.asarray(out)
+
+
+def attention_rows(q, k, v):
+    """Unscaled-softmax attention for a block of query rows.
+
+    ``out[r, j] = sum_t exp(q[r]·k[t]) v[t, j] / sum_t exp(q[r]·k[t])``
+    with q ``(R, D)``, k ``(T, D)``, v ``(T, D)``.
+    """
+    _chaos()
+    interpret = _use_interpret()
+    _count(interpret)
+    q = jnp.asarray(q)
+    k = jnp.asarray(k)
+    v = jnp.asarray(v)
+    rows, d = q.shape
+    skv = k.shape[0]
+    # cancel the kernel's baked-in 1/sqrt(d) score scale
+    qs = q * jnp.asarray(math.sqrt(d), q.dtype)
+    out = flash_attention_bhsd(
+        qs[None], k[None], v[None], causal=False, window=0, softcap=0.0,
+        bq=_div_block(rows, 128), bk=_div_block(skv, 128),
+        interpret=interpret)
+    return np.asarray(out[0])
+
+
+def scan_rows(x_rows, c):
+    """First-order recurrence ``h_t = c*h_{t-1} + x[r, t]`` per row,
+    ``h_{-1} = 0``, through the selective-scan kernel."""
+    _chaos()
+    c = float(c)
+    if not 0.0 < c < 1.0:
+        raise ValueError(
+            f"pallas-lowering-infeasible: scan decay coefficient {c!r} "
+            f"outside (0, 1) (a = log(-log(c)) undefined)")
+    interpret = _use_interpret()
+    _count(interpret)
+    x_rows = jnp.asarray(x_rows)
+    rows, length = x_rows.shape
+    dtype = x_rows.dtype
+    # identity mapping: B=1 batch, I=rows channels, N=1 state; with
+    # dt=1 and B=C=1 the recurrence collapses to h = exp(-exp(a))*h + x
+    # and a = log(-log(c)) makes exp(-exp(a)) == c exactly
+    x = x_rows.T[None]                               # (1, L, R)
+    dt = jnp.ones((1, length, rows), dtype)
+    ones_n = jnp.ones((1, length, 1), dtype)
+    a = jnp.full((rows, 1), math.log(-math.log(c)), dtype)
+    d_skip = jnp.zeros((rows,), dtype)
+    y = _mamba_ops.mamba_scan(x, dt, ones_n, ones_n, a, d_skip,
+                              force_pallas=True, interpret=interpret)
+    return np.asarray(y[0]).T                        # (R, L)

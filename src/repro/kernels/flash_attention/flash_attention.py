@@ -27,7 +27,7 @@ NEG_INF = -1e30
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                   kv_steps: int, bq: int, bk: int, scale: float,
-                  causal: bool, window: int, softcap: float):
+                  causal: bool, window: int, softcap: float, acc_dtype):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -41,7 +41,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     k = k_ref[0]                       # (bk, d)
     s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        preferred_element_type=acc_dtype) * scale    # (bq, bk)
     if softcap and softcap > 0:
         s = jnp.tanh(s / softcap) * softcap
 
@@ -62,7 +62,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     m_ref[...] = m_new
     acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
         p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+        preferred_element_type=acc_dtype)
 
     @pl.when(ki == kv_steps - 1)
     def _store():
@@ -83,9 +83,12 @@ def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
     assert sq % bq == 0 and skv % bk == 0, (sq, skv, bq, bk)
     kv_steps = skv // bk
     scale = 1.0 / math.sqrt(d)
+    # running max/sum/acc in at least fp32; f64 inputs keep precision
+    acc_dtype = jnp.promote_types(q.dtype, jnp.float32)
     kern = functools.partial(
         _flash_kernel, kv_steps=kv_steps, bq=bq, bk=bk, scale=scale,
-        causal=causal, window=window, softcap=softcap)
+        causal=causal, window=window, softcap=softcap,
+        acc_dtype=acc_dtype)
     return pl.pallas_call(
         kern,
         grid=(bh, sq // bq, kv_steps),
@@ -97,9 +100,9 @@ def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
         out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), acc_dtype),
+            pltpu.VMEM((bq, 1), acc_dtype),
+            pltpu.VMEM((bq, d), acc_dtype),
         ],
         interpret=interpret,
     )(q, k, v)

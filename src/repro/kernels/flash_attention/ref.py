@@ -15,8 +15,9 @@ def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
     skv, kvh = k.shape[1], k.shape[2]
     g = h // kvh
     qg = q.reshape(b, sq, kvh, g, d)
+    acc = jnp.promote_types(q.dtype, jnp.float32)
     s = jnp.einsum("bqkgd,bskd->bqkgs", qg, k,
-                   preferred_element_type=jnp.float32) / math.sqrt(d)
+                   preferred_element_type=acc) / math.sqrt(d)
     if softcap and softcap > 0:
         s = jnp.tanh(s / softcap) * softcap
     q_pos = jnp.arange(sq)

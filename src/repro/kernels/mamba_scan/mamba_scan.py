@@ -23,19 +23,19 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _scan_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, dskip_ref, y_ref,
-                 h_ref, *, chunk: int):
+                 h_ref, *, chunk: int, acc_dtype):
     ci = pl.program_id(1)
 
     @pl.when(ci == 0)
     def _init():
         h_ref[...] = jnp.zeros_like(h_ref)
 
-    decay = -jnp.exp(a_ref[...])                   # (I, N)
-    x = x_ref[0].astype(jnp.float32)               # (chunk, I)
-    dt = dt_ref[0].astype(jnp.float32)
-    bm = b_ref[0].astype(jnp.float32)              # (chunk, N)
-    cm = c_ref[0].astype(jnp.float32)
-    dskip = dskip_ref[...]                         # (1, I)
+    decay = -jnp.exp(a_ref[...].astype(acc_dtype))  # (I, N)
+    x = x_ref[0].astype(acc_dtype)                 # (chunk, I)
+    dt = dt_ref[0].astype(acc_dtype)
+    bm = b_ref[0].astype(acc_dtype)                # (chunk, N)
+    cm = c_ref[0].astype(acc_dtype)
+    dskip = dskip_ref[...].astype(acc_dtype)       # (1, I)
 
     def step(t, carry):
         h, y = carry
@@ -45,7 +45,7 @@ def _scan_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, dskip_ref, y_ref,
         y = jax.lax.dynamic_update_slice_in_dim(y, yt[None], t, axis=0)
         return h, y
 
-    y0 = jnp.zeros((chunk, x.shape[1]), jnp.float32)
+    y0 = jnp.zeros((chunk, x.shape[1]), acc_dtype)
     h, y = jax.lax.fori_loop(0, chunk, step, (h_ref[...], y0))
     h_ref[...] = h
     y_ref[0] = (y + dskip * x).astype(y_ref.dtype)
@@ -59,7 +59,10 @@ def mamba_scan(x, dt, Bm, Cm, a, d_skip, *, chunk: int = 128,
     n = Bm.shape[-1]
     chunk = min(chunk, l)
     assert l % chunk == 0, (l, chunk)
-    kern = functools.partial(_scan_kernel, chunk=chunk)
+    # state carried in at least fp32; f64 inputs keep full precision
+    acc_dtype = jnp.promote_types(x.dtype, jnp.float32)
+    kern = functools.partial(_scan_kernel, chunk=chunk,
+                             acc_dtype=acc_dtype)
     return pl.pallas_call(
         kern,
         grid=(b, l // chunk),
@@ -73,6 +76,6 @@ def mamba_scan(x, dt, Bm, Cm, a, d_skip, *, chunk: int = 128,
         ],
         out_specs=pl.BlockSpec((1, chunk, inner), lambda i, j: (i, j, 0)),
         out_shape=jax.ShapeDtypeStruct((b, l, inner), x.dtype),
-        scratch_shapes=[pltpu.VMEM((inner, n), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((inner, n), acc_dtype)],
         interpret=interpret,
     )(x, dt, Bm, Cm, a, d_skip.reshape(1, -1))

@@ -22,7 +22,8 @@ def mamba_scan_ref(x, dt, Bm, Cm, a, d_skip):
         y = (h * ct[:, None, :]).sum(-1)                   # (B, I)
         return h, y
 
-    h0 = jnp.zeros((b, inner, n), jnp.float32)
+    h0 = jnp.zeros((b, inner, n), jnp.promote_types(x.dtype,
+                                                    jnp.float32))
     xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
           jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
     _, ys = jax.lax.scan(step, h0, xs)

@@ -18,13 +18,14 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, k_steps: int):
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, k_steps: int,
+                   acc_dtype):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     acc_ref[...] += jnp.dot(x_ref[...], y_ref[...],
-                            preferred_element_type=jnp.float32)
+                            preferred_element_type=acc_dtype)
 
     @pl.when(pl.program_id(2) == k_steps - 1)
     def _store():
@@ -44,8 +45,11 @@ def matmul(x, y, *, bm: int = 128, bn: int = 128, bk: int = 512,
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
         (m, n, k, bm, bn, bk)
     k_steps = k // bk
+    # accumulate in at least fp32; f64 inputs keep full precision
+    acc_dtype = jnp.promote_types(x.dtype, jnp.float32)
     return pl.pallas_call(
-        functools.partial(_matmul_kernel, k_steps=k_steps),
+        functools.partial(_matmul_kernel, k_steps=k_steps,
+                          acc_dtype=acc_dtype),
         grid=(m // bm, n // bn, k_steps),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
@@ -53,6 +57,6 @@ def matmul(x, y, *, bm: int = 128, bn: int = 128, bk: int = 512,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
         interpret=interpret,
     )(x, y)

@@ -7,5 +7,5 @@ import jax.numpy as jnp
 
 def matmul_ref(x, y, out_dtype=None):
     out_dtype = out_dtype or x.dtype
-    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(
-        out_dtype)
+    acc = jnp.promote_types(x.dtype, jnp.float32)
+    return jnp.dot(x, y, preferred_element_type=acc).astype(out_dtype)

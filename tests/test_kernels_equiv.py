@@ -1,0 +1,214 @@
+"""Three-way kernel equivalence: pallas-interpret vs jnp oracle vs numpy.
+
+The pallas backend (PR 10) routes scheduled pfor units onto the seed
+kernels, so drift between ``kernels/*/ref.py`` and ``kernels/*/ops.py``
+— previously dead code nobody executed — now silently corrupts
+distributed results. Every kernel is pinned against an independent
+pure-numpy model at atol 1e-6 (f32) / 1e-8 (f64), in both dtypes, and
+the ``repro.kernels.api`` entry points the pattern-matcher emits calls
+to are held to the same bar against their numpy equivalents.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.kernels import api
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.matmul.ops import matmul
+from repro.kernels.matmul.ref import matmul_ref
+from repro.kernels.mamba_scan.ops import mamba_scan
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+
+ATOL = {"float32": 1e-6, "float64": 1e-8}
+DTYPES = ("float32", "float64")
+
+
+def _tol(dtype):
+    return dict(atol=ATOL[dtype], rtol=ATOL[dtype])
+
+
+def _assert_three_way(pallas, oracle, ground, dtype):
+    """pallas-interpret vs ref vs numpy, all pairs."""
+    pallas = np.asarray(pallas, np.float64)
+    oracle = np.asarray(oracle, np.float64)
+    np.testing.assert_allclose(oracle, ground, **_tol(dtype))
+    np.testing.assert_allclose(pallas, ground, **_tol(dtype))
+    np.testing.assert_allclose(pallas, oracle, **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# numpy models (independent of jax — ground truth for both legs)
+# ---------------------------------------------------------------------------
+
+def np_matmul(x, y):
+    return np.asarray(x, np.float64) @ np.asarray(y, np.float64)
+
+
+def np_attention(q, k, v, *, causal, window=0, softcap=0.0):
+    """(B, Sq, H, D) x (B, Skv, KVH, D) GQA attention in float64."""
+    q64, k64, v64 = (np.asarray(a, np.float64) for a in (q, k, v))
+    b, sq, h, d = q64.shape
+    skv, kvh = k64.shape[1], k64.shape[2]
+    g = h // kvh
+    out = np.zeros((b, sq, h, d))
+    for bi in range(b):
+        for hi in range(h):
+            kv = hi // g
+            s = q64[bi, :, hi] @ k64[bi, :, kv].T / math.sqrt(d)
+            if softcap and softcap > 0:
+                s = np.tanh(s / softcap) * softcap
+            mask = np.ones((sq, skv), bool)
+            qp, kp = np.arange(sq)[:, None], np.arange(skv)[None, :]
+            if causal:
+                mask &= kp <= qp
+            if window and window > 0:
+                mask &= kp > (qp - window)
+            s = np.where(mask, s, -np.inf)
+            p = np.exp(s - s.max(-1, keepdims=True))
+            p /= p.sum(-1, keepdims=True)
+            out[bi, :, hi] = p @ v64[bi, :, kv]
+    return out
+
+
+def np_mamba_scan(x, dt, Bm, Cm, a, d_skip):
+    """Sequential recurrence, float64 throughout."""
+    x64, dt64, b64, c64, a64, d64 = (
+        np.asarray(t, np.float64) for t in (x, dt, Bm, Cm, a, d_skip))
+    b, l, inner = x64.shape
+    n = b64.shape[-1]
+    decay = -np.exp(a64)
+    h = np.zeros((b, inner, n))
+    y = np.zeros((b, l, inner))
+    for t in range(l):
+        a_bar = np.exp(dt64[:, t, :, None] * decay[None])
+        h = a_bar * h + (dt64[:, t] * x64[:, t])[..., None] \
+            * b64[:, t, None, :]
+        y[:, t] = (h * c64[:, t, None, :]).sum(-1)
+    return y + d64[None, None] * x64
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_matmul_three_way(dtype):
+    rng = np.random.default_rng(7)
+    # 0.1-scale keeps f32 accumulation error inside the 1e-6 bar
+    x = jnp.asarray(0.1 * rng.normal(size=(48, 40)), dtype)
+    y = jnp.asarray(0.1 * rng.normal(size=(40, 24)), dtype)
+    got = matmul(x, y, force_pallas=True, interpret=True,
+                 bm=16, bn=16, bk=32)
+    _assert_three_way(got, matmul_ref(x, y), np_matmul(x, y), dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("causal,window,softcap",
+                         [(True, 0, 0.0), (False, 0, 0.0),
+                          (True, 8, 0.0), (True, 0, 5.0)])
+def test_attention_three_way(dtype, causal, window, softcap):
+    rng = np.random.default_rng(11)
+    q = jnp.asarray(0.3 * rng.normal(size=(1, 32, 2, 16)), dtype)
+    k = jnp.asarray(0.3 * rng.normal(size=(1, 32, 1, 16)), dtype)
+    v = jnp.asarray(0.3 * rng.normal(size=(1, 32, 1, 16)), dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, force_pallas=True,
+                          interpret=True, bq=16, bk=16)
+    ref = attention_ref(q, k, v, causal=causal, window=window,
+                        softcap=softcap)
+    truth = np_attention(q, k, v, causal=causal, window=window,
+                         softcap=softcap)
+    _assert_three_way(got, ref, truth, dtype)
+
+
+# ---------------------------------------------------------------------------
+# mamba selective scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_mamba_scan_three_way(dtype):
+    rng = np.random.default_rng(13)
+    b, l, inner, n = 2, 48, 6, 4
+    x = jnp.asarray(0.2 * rng.normal(size=(b, l, inner)), dtype)
+    dt = jnp.asarray(rng.uniform(0.1, 0.9, size=(b, l, inner)), dtype)
+    bm = jnp.asarray(0.2 * rng.normal(size=(b, l, n)), dtype)
+    cm = jnp.asarray(0.2 * rng.normal(size=(b, l, n)), dtype)
+    a = jnp.asarray(rng.uniform(-1.5, -0.2, size=(inner, n)), dtype)
+    d = jnp.asarray(0.2 * rng.normal(size=(inner,)), dtype)
+    got = mamba_scan(x, dt, bm, cm, a, d, force_pallas=True,
+                     interpret=True, chunk=16)
+    ref = mamba_scan_ref(x, dt, bm, cm, a, d)
+    truth = np_mamba_scan(x, dt, bm, cm, a, d)
+    _assert_three_way(got, ref, truth, dtype)
+
+
+# ---------------------------------------------------------------------------
+# the matcher-facing api surface (what pallas twin bodies actually call)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_api_matmul_vs_numpy(dtype):
+    rng = np.random.default_rng(17)
+    a = (0.1 * rng.normal(size=(33, 20))).astype(dtype)
+    b = (0.1 * rng.normal(size=(20, 15))).astype(dtype)
+    got = np.asarray(api.matmul(a, b), np.float64)
+    np.testing.assert_allclose(got, np_matmul(a, b), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_api_attention_rows_vs_numpy(dtype):
+    rng = np.random.default_rng(19)
+    t, d = 24, 12
+    q = (0.3 * rng.normal(size=(10, d))).astype(dtype)
+    k = (0.3 * rng.normal(size=(t, d))).astype(dtype)
+    v = (0.3 * rng.normal(size=(t, d))).astype(dtype)
+    got = np.asarray(api.attention_rows(q, k, v), np.float64)
+    # unscaled softmax rows: p = exp(q·kᵀ), out = (p @ v) / p.sum()
+    s = np.asarray(q, np.float64) @ np.asarray(k, np.float64).T
+    p = np.exp(s)
+    truth = (p @ np.asarray(v, np.float64)) / p.sum(-1, keepdims=True)
+    np.testing.assert_allclose(got, truth, **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_api_scan_rows_vs_numpy(dtype):
+    rng = np.random.default_rng(23)
+    rows, l, c = 6, 40, 0.85
+    x = (0.2 * rng.normal(size=(rows, l))).astype(dtype)
+    got = np.asarray(api.scan_rows(x, c), np.float64)
+    truth = np.zeros((rows, l))
+    h = np.zeros(rows)
+    for t in range(l):
+        h = c * h + np.asarray(x[:, t], np.float64)
+        truth[:, t] = h
+    np.testing.assert_allclose(got, truth, **_tol(dtype))
+
+
+def test_api_scan_rows_rejects_unstable_coeff():
+    x = np.ones((2, 8))
+    with pytest.raises(ValueError, match="pallas-lowering-infeasible"):
+        api.scan_rows(x, 1.0)
+    with pytest.raises(ValueError, match="pallas-lowering-infeasible"):
+        api.scan_rows(x, 0.0)
+
+
+def test_api_counts_calls():
+    api.reset()
+    api.matmul(np.ones((4, 3)), np.ones((3, 2)))
+    s = api.stats()
+    assert s.get("pallas_calls") == 1
+    assert s.get("pallas_interpret_calls") == 1  # CPU host
+    drained = api.take_stats()
+    assert drained.get("pallas_calls") == 1
+    assert api.stats() == {}
